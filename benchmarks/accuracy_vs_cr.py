@@ -1,0 +1,134 @@
+"""Accuracy-vs-CR reproduction on a trained char-LM (paper Tables II/VI
+and Fig. 4 trends, on compute we actually have — CBT/CIFAR/GLUE are
+unavailable offline).
+
+1. Train a small GPT-style char-LM on the synthetic corpus (FullContext).
+2. Evaluate bits-per-char teacher-forced under the SIMULATED P-device
+   PRISM protocol at CR ∈ {1, 2, 4, 8} × P ∈ {2, 3, 4}:
+     - bpc must degrade monotonically (minor at low CR) — Table VI trend;
+     - CR=1 must equal the single-device bpc exactly — exactness property;
+     - 'prism' (≡ duplicated) must beat 'prism_nodup' — Table II;
+3. Fine-tune WITH PRISM in the loop at the most aggressive setting and
+   show bpc recovery — the paper's fine-tuning claim (§V-D).
+"""
+from __future__ import annotations
+
+import math
+
+SEQ, BATCH = 120, 16          # SEQ divisible by P ∈ {2, 3, 4}
+
+
+class Harness:
+    def __init__(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.data.pipeline import (CharTokenizer, lm_batches,
+                                         synthetic_text)
+        from repro.models import transformer as T
+        from repro.models.config import ModelConfig
+        from repro.models.context import SimulatedContext
+        from repro.optim import (adamw_init, adamw_update,
+                                 clip_by_global_norm)
+        self.jax, self.jnp, self.T = jax, jnp, T
+        self.SimulatedContext = SimulatedContext
+        self.adamw_update = adamw_update
+        self.clip = clip_by_global_norm
+
+        tok = CharTokenizer()
+        self.train_it = lm_batches(tok.encode(synthetic_text(200_000, 1)),
+                                   batch=BATCH, seq=SEQ, seed=0)
+        held_it = lm_batches(tok.encode(synthetic_text(20_000, 2)),
+                             batch=BATCH, seq=SEQ, seed=9)
+        self.eval_batches = [next(held_it) for _ in range(8)]
+        self.cfg = ModelConfig(
+            name="char-lm", arch_type="dense", n_layers=4, d_model=128,
+            n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256,
+            vocab_size=tok.vocab, mlp_kind="gelu", norm_kind="rmsnorm",
+            pos="rope", tie_embeddings=True)
+        self.params = T.init(self.cfg, jax.random.PRNGKey(0))
+        self.opt = adamw_init(self.params)
+
+    def loss(self, params, x, y, ctx_cfg=None):
+        jnp = self.jnp
+        ctx = self.SimulatedContext(ctx_cfg) if ctx_cfg is not None else None
+        logits, _ = self.T.forward(self.cfg, params, x, ctx=ctx, chunk=8)
+        lse = self.jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), y[..., None], -1)[..., 0]
+        return (lse - gold).mean()
+
+    def train(self, steps, ctx_cfg=None, lr=3e-3):
+        jax, jnp = self.jax, self.jnp
+
+        def step(params, opt, x, y):
+            loss, grads = jax.value_and_grad(
+                lambda p: self.loss(p, x, y, ctx_cfg))(params)
+            grads, _ = self.clip(grads, 1.0)
+            params, opt = self.adamw_update(params, grads, opt, lr=lr,
+                                            weight_decay=0.01)
+            return params, opt, loss
+        jstep = jax.jit(step)
+        first = last = None
+        for _ in range(steps):
+            x, y = next(self.train_it)
+            self.params, self.opt, loss = jstep(
+                self.params, self.opt, jnp.asarray(x), jnp.asarray(y))
+            last = float(loss)
+            first = first if first is not None else last
+        return first, last
+
+    def bpc(self, ctx_cfg=None, params=None):
+        jax, jnp = self.jax, self.jnp
+        params = self.params if params is None else params
+        f = jax.jit(lambda p, x, y: self.loss(p, x, y, ctx_cfg))
+        tot = sum(float(f(params, jnp.asarray(x), jnp.asarray(y)))
+                  for x, y in self.eval_batches)
+        return tot / len(self.eval_batches) / math.log(2)
+
+
+def main(report):
+    from repro.core.protocol import PrismConfig
+    h = Harness()
+    first, last = h.train(400)
+    report("accuracy/train/final_loss", 0.0,
+           f"step400 loss={last:.3f} (start {first:.3f})")
+    assert last < first * 0.7, "char-LM failed to train"
+
+    base = h.bpc()
+    report("accuracy/bpc/single", 0.0, f"{base:.4f}")
+
+    # exactness: CR=1 (L = N_p) == single-device
+    for p in (2, 3, 4):
+        b = h.bpc(PrismConfig(P=p, L=SEQ // p))
+        report(f"accuracy/bpc/P{p}-CR1-exact", 0.0,
+               f"{b:.4f} (single {base:.4f})")
+        assert abs(b - base) < 5e-3, (p, b, base)
+
+    # CR sweep: monotonic minor degradation (Table VI / Fig. 4 trend)
+    trend_ok = True
+    for p in (2, 3):
+        prev = base
+        for cr in (2, 4, 8):
+            b = h.bpc(PrismConfig(P=p, cr=float(cr)))
+            report(f"accuracy/bpc/P{p}-CR{cr}", 0.0,
+                   f"{b:.4f} (Δ={b - base:+.4f})")
+            trend_ok &= b >= prev - 2e-2
+            prev = b
+    report("accuracy/trend/monotonic_degradation", 0.0, str(trend_ok))
+
+    # Table II: duplication (prism ≡ duplicated) vs no duplication
+    for p, cr in ((2, 4.0), (3, 4.0)):
+        b_dup = h.bpc(PrismConfig(P=p, cr=cr, mode="prism"))
+        b_nod = h.bpc(PrismConfig(P=p, cr=cr, mode="prism_nodup"))
+        report(f"accuracy/table2/P{p}-CR{cr}", 0.0,
+               f"duplicated={b_dup:.4f} nodup={b_nod:.4f} "
+               f"{'OK(dup-better)' if b_dup <= b_nod else 'UNEXPECTED'}")
+
+    # fine-tune WITH PRISM at the most aggressive setting (paper §V-D)
+    hard = PrismConfig(P=3, cr=8.0)
+    before = h.bpc(hard)
+    h.train(150, ctx_cfg=hard, lr=1e-3)
+    after = h.bpc(hard)
+    report("accuracy/finetune/P3-CR8", 0.0,
+           f"before={before:.4f} after={after:.4f} "
+           f"{'OK(recovered)' if after < before else 'UNEXPECTED'}")

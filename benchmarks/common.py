@@ -1,0 +1,111 @@
+"""Shared benchmark machinery: wall-clock timer and the analytic FLOP /
+communication model used by the paper's tables (IV, V, VI).
+
+The FLOP model counts 2 flops per MAC over the actual PRISM per-device
+shapes: Q from the local partition (N_p rows), K/V from the augmented
+matrix (M = N_p + (P-1)·L rows for PRISM, M = N for Voltage — the
+baseline's redundant K/V computation), scores/AV over (N_p × M), and the
+position-wise FFN over N_p rows.  This is the quantity the paper reports
+as 'GFLOPs /device'.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def timeit(fn, *, warmup=1, iters=5):
+    """Median wall-clock microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+@dataclass(frozen=True)
+class EncSpec:
+    """Uniform encoder/decoder transformer for the analytic model."""
+    n_layers: int
+    d: int            # d_model
+    h: int            # heads
+    hd: int           # head dim
+    d_ff: int
+    n: int            # sequence length
+    vocab: int = 0
+    n_classes: int = 0
+    gated: bool = False
+    patch_in: int = 0  # ViT patch-embedding input features
+
+
+def layer_flops_device(s: EncSpec, n_p: int, m: int) -> float:
+    """One Transformer block on one device: local queries n_p, K/V source
+    rows m (the augmented matrix)."""
+    dh = s.h * s.hd
+    f = 0.0
+    f += 2 * n_p * s.d * dh                # W_q
+    f += 2 * 2 * m * s.d * dh              # W_k, W_v  (the PRISM saving)
+    f += 2 * n_p * m * dh                  # Q K^T
+    f += 2 * n_p * m * dh                  # S V
+    f += 2 * n_p * dh * s.d                # W_o
+    ff_mults = 3 if s.gated else 2
+    f += 2 * ff_mults * n_p * s.d * s.d_ff  # FFN
+    return f
+
+
+def model_flops(s: EncSpec, mode: str, p: int, L: int) -> dict:
+    """Total + per-device forward GFLOPs for a partitioning mode."""
+    if mode == "single":
+        p_eff, n_p, m = 1, s.n, s.n
+    elif mode == "voltage":
+        p_eff, n_p, m = p, -(-s.n // p), s.n
+    elif mode == "prism":
+        n_p = -(-s.n // p)
+        p_eff, m = p, n_p + (p - 1) * L
+    else:
+        raise ValueError(mode)
+    per_dev = s.n_layers * layer_flops_device(s, n_p, m)
+    # embedding / head (on the master or replicated; count once)
+    extra = 0.0
+    if s.patch_in:
+        extra += 2 * s.n * s.patch_in * s.d
+    if s.n_classes:
+        extra += 2 * s.d * s.n_classes
+    if s.vocab:
+        extra += 2 * s.n * s.d * s.vocab     # LM head (tied)
+    total = p_eff * per_dev + extra
+    return {"total_gflops": total / 1e9,
+            "per_device_gflops": (per_dev + extra / p_eff) / 1e9}
+
+
+def comm_elements(s: EncSpec, mode: str, p: int, L: int) -> float:
+    """Per-device per-layer transmitted elements (paper §IV-C)."""
+    if mode == "single" or p == 1:
+        return 0.0
+    if mode == "voltage":
+        return (p - 1) * s.n * s.d / p
+    return (p - 1) * L * s.d
+
+
+def comm_bytes_total(s: EncSpec, mode: str, p: int, L: int,
+                     bytes_per_el: int = 4) -> float:
+    """Whole-model per-device communication volume (unicast, as in the
+    paper's comparison)."""
+    return s.n_layers * comm_elements(s, mode, p, L) * bytes_per_el
+
+
+def speedup(base: float, ours: float) -> float:
+    return 100.0 * (1.0 - ours / base) if base else 0.0
+
+
+VIT_B16 = EncSpec(n_layers=12, d=768, h=12, hd=64, d_ff=3072, n=197,
+                  n_classes=1000, patch_in=16 * 16 * 3)
+BERT_BASE = EncSpec(n_layers=12, d=768, h=12, hd=64, d_ff=3072, n=256,
+                    n_classes=2)
+GPT2_SMALL = EncSpec(n_layers=12, d=768, h=12, hd=64, d_ff=3072, n=350,
+                     vocab=50257)

@@ -1,0 +1,85 @@
+"""Paper Fig. 5 — end-to-end latency vs network bandwidth (ViT, B=1).
+
+The paper ran 2×2.1 GHz CPU cores per device; we measure THIS machine's
+actual single-device ViT forward wall time, scale per-mode compute by the
+analytic FLOP ratio (the machine's achieved flops/s cancels), and add the
+serial communication term bytes/bandwidth per Transformer block.  Output:
+latency(bandwidth) for single / voltage / prism — the paper's crossover
+(Voltage worse than single-device at low bandwidth, PRISM better
+everywhere) must reproduce.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (VIT_B16 as S, comm_bytes_total, model_flops, timeit)
+
+BANDWIDTHS_MBPS = (50, 100, 200, 400, 600, 800, 1000)
+
+POINTS = [
+    ("single", 1, 0),
+    ("voltage", 2, 0),
+    ("voltage", 3, 0),
+    ("prism", 2, 10),     # paper: CR=9.9
+    ("prism", 3, 10),     # paper: CR=6.55 (PDPLC 20 -> L=10)
+]
+
+
+def measure_single_forward_s() -> float:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("vit-b16")
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    embeds = jax.random.normal(jax.random.PRNGKey(1), (1, 197, cfg.d_model))
+
+    @jax.jit
+    def fwd(p, e):
+        logits, _ = T.forward(cfg, p, None, embeds=e)
+        return logits
+    return timeit(lambda: fwd(params, embeds).block_until_ready(),
+                  warmup=2, iters=5) / 1e6
+
+
+def rows():
+    t_single = measure_single_forward_s()
+    base_flops = model_flops(S, "single", 1, 0)["per_device_gflops"]
+    out = []
+    for mode, p, L in POINTS:
+        f = model_flops(S, mode, p, L)["per_device_gflops"]
+        t_comp = t_single * f / base_flops
+        comm = comm_bytes_total(S, mode, p, L)
+        for bw in BANDWIDTHS_MBPS:
+            t_comm = comm * 8 / (bw * 1e6)
+            out.append({
+                "mode": f"{mode}-P{p}" + (f"-L{L}" if L else ""),
+                "bandwidth_mbps": bw,
+                "t_compute_ms": round(t_comp * 1e3, 2),
+                "t_comm_ms": round(t_comm * 1e3, 2),
+                "t_total_ms": round((t_comp + t_comm) * 1e3, 2),
+            })
+    return out, t_single
+
+
+def main(report):
+    out, t_single = rows()
+    report("fig5/single_device_forward", t_single * 1e6, "measured")
+    by_mode = {}
+    for r in out:
+        by_mode.setdefault(r["mode"], []).append(r)
+    for mode, rs in by_mode.items():
+        lat = " ".join(f"{r['bandwidth_mbps']}Mbps:{r['t_total_ms']}ms"
+                       for r in rs)
+        report(f"fig5/latency/{mode}", 0.0, lat)
+    # the paper's qualitative claims, asserted:
+    lat200 = {m: next(r["t_total_ms"] for r in rs
+                      if r["bandwidth_mbps"] == 200)
+              for m, rs in by_mode.items()}
+    single = lat200["single-P1"]
+    assert lat200["prism-P2-L10"] < single, lat200
+    assert lat200["voltage-P2"] > lat200["prism-P2-L10"], lat200
+    report("fig5/claim/prism_beats_single_at_200mbps", 0.0,
+           f"{lat200['prism-P2-L10']} < {single}")
+    report("fig5/claim/prism_beats_voltage_at_200mbps", 0.0,
+           f"{lat200['prism-P2-L10']} < {lat200['voltage-P2']}")

@@ -1,0 +1,44 @@
+"""Operator microbenchmarks (CPU wall-clock; the TPU path is validated
+structurally via the dry-run, since Pallas interpret mode is a Python
+emulator whose timing is meaningless)."""
+from __future__ import annotations
+
+
+def main(report):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.attention import prism_attention
+    from repro.core.segment_means import segment_means
+    from .common import timeit
+
+    key = jax.random.PRNGKey(0)
+
+    # PRISM vs exact attention at the operating point where the compute
+    # saving shows: N_p local + (P-1)L means vs full N columns.
+    b, n, p, L, h, hd = 1, 2048, 4, 32, 8, 64
+    n_p = n // p
+    m = n_p + (p - 1) * L
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (b, n_p, h, hd))
+    k_c = jax.random.normal(ks[1], (b, m, h, hd))
+    v_c = jax.random.normal(ks[2], (b, m, h, hd))
+    k_f = jax.random.normal(ks[3], (b, n, h, hd))
+    v_f = jax.random.normal(ks[4], (b, n, h, hd))
+    g = jnp.concatenate([jnp.ones(n_p), jnp.full(((p - 1) * L,), 16.0)])
+
+    f_prism = jax.jit(lambda q, k, v, g: prism_attention(q, k, v, g=g))
+    f_volt = jax.jit(lambda q, k, v: prism_attention(q, k, v))
+    t_p = timeit(lambda: f_prism(q, k_c, v_c, g).block_until_ready(),
+                 iters=10)
+    t_v = timeit(lambda: f_volt(q, k_f, v_f).block_until_ready(),
+                 iters=10)
+    report("micro/attention/prism_device_view", t_p,
+           f"M={m} cols")
+    report("micro/attention/voltage_device_view", t_v,
+           f"M={n} cols; prism speedup x{t_v / t_p:.2f}")
+
+    x = jax.random.normal(ks[5], (8, 4096, 1024))
+    f_sm = jax.jit(lambda x: segment_means(x, 32))
+    t_sm = timeit(lambda: f_sm(x).block_until_ready(), iters=10)
+    report("micro/segment_means/8x4096x1024->32", t_sm,
+           f"{x.size * 4 / (t_sm / 1e6) / 1e9:.1f} GB/s read")

@@ -1,0 +1,54 @@
+"""Aggregate dry-run JSONL records into the §Roofline markdown table."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    rows = [json.loads(l) for l in open(path)]
+    # keep the latest record per (arch, shape, mesh, mode)
+    out = {}
+    for r in rows:
+        out[(r["arch"], r["shape"], r["mesh"], r["mode"])] = r
+    return list(out.values())
+
+
+def markdown(rows, title):
+    lines = [f"### {title}", "",
+             "| arch | shape | mesh | t_compute(ms) | t_memory(ms) | "
+             "t_collective(ms) | bound | MODEL_FLOPS | useful | "
+             "peak_live(GB) |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order[r["shape"]])):
+        peak = r.get("mem_peak_bytes") or r.get("mem_temp_bytes") or 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {1e3 * r['t_compute']:.2f} | {1e3 * r['t_memory']:.2f} "
+            f"| {1e3 * r['t_collective']:.2f} | {r['bottleneck']} "
+            f"| {r['model_flops']:.2e} | {r['useful']:.3f} "
+            f"| {peak / 1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def main(report):
+    for path, title in (("results_singlepod.jsonl", "single-pod 16x16"),
+                        ("results_multipod.jsonl", "multi-pod 2x16x16")):
+        rows = load(path)
+        report(f"roofline/{title.split()[0]}/rows", 0.0, str(len(rows)))
+        for r in rows:
+            report(
+                f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}", 0.0,
+                f"comp={1e3 * r['t_compute']:.2f}ms "
+                f"mem={1e3 * r['t_memory']:.2f}ms "
+                f"coll={1e3 * r['t_collective']:.2f}ms "
+                f"-> {r['bottleneck']}")
+
+
+if __name__ == "__main__":
+    for p in ("results_singlepod.jsonl", "results_multipod.jsonl"):
+        print(markdown(load(p), p))

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table4,fig5]
+
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call is 0 for
+analytic/accuracy rows).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("table4_vit", "table5_bert", "table6_gpt2", "fig5_latency",
+          "microbench", "accuracy_vs_cr", "roofline_table")
+
+
+def report(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    failures = []
+    for suite in SUITES:
+        if only and suite not in only and suite.split("_")[0] not in only:
+            continue
+        t0 = time.time()
+        print(f"# ==== {suite} ====")
+        try:
+            mod = importlib.import_module(f"benchmarks.{suite}")
+            mod.main(report)
+            print(f"# {suite} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((suite, repr(e)))
+            print(f"# {suite} FAILED: {e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Paper Table V — BERT computation & communication efficiency.
+
+Operating points from the paper: P=2 with PDPLC ∈ {13, 1} (CR ≈ 9.85 /
+128) and P=3 with PDPLC ∈ {18, 2} (CR ≈ 9.48 / 85.3).  GLUE accuracy
+columns are covered by accuracy_vs_cr (offline datasets); this table
+reproduces the GFLOPs / speed-up / communication columns.
+"""
+from __future__ import annotations
+
+from .common import BERT_BASE as S, model_flops, comm_elements, speedup
+
+ROWS = [
+    ("single", 1, 0),
+    ("voltage", 2, 0),
+    ("voltage", 3, 0),
+    ("prism", 2, 13),
+    ("prism", 2, 1),
+    ("prism", 3, 18),
+    ("prism", 3, 2),
+]
+
+PAPER = {
+    ("single", 1, 0): (45.93, 45.93),
+    ("voltage", 2, 0): (53.18, 26.59),
+    ("voltage", 3, 0): (60.42, 20.14),
+    ("prism", 2, 13): (45.58, 22.79),
+    ("prism", 2, 1): (44.79, 22.40),
+    ("prism", 3, 18): (46.02, 15.34),
+    ("prism", 3, 2): (44.51, 14.84),
+}
+
+PAPER_COMM = {("prism", 2, 13): 89.84, ("prism", 2, 1): 99.22,
+              ("prism", 3, 18): 89.47, ("prism", 3, 2): 98.83}
+
+
+def rows():
+    base = model_flops(S, "single", 1, 0)["per_device_gflops"]
+    out = []
+    for mode, p, pdplc in ROWS:
+        L = pdplc // max(1, p - 1) if pdplc else 0
+        f = model_flops(S, mode, p, L)
+        volt = comm_elements(S, "voltage", p, 0)
+        ours = comm_elements(S, mode, p, L)
+        cr = (S.n / (L * p)) if L else float("nan")
+        pt, pd = PAPER.get((mode, p, pdplc), (float("nan"),) * 2)
+        out.append({
+            "strategy": mode, "P": p, "PDPLC": pdplc,
+            "total_gflops": round(f["total_gflops"], 2),
+            "per_device_gflops": round(f["per_device_gflops"], 2),
+            "comp_speedup_pct": round(
+                speedup(base, f["per_device_gflops"]), 2),
+            "CR": round(cr, 2) if L else "-",
+            "comm_speedup_pct": round(speedup(volt, ours), 2)
+            if p > 1 else "-",
+            "paper_total": pt, "paper_per_dev": pd,
+            "paper_comm": PAPER_COMM.get((mode, p, pdplc), "-"),
+        })
+    return out
+
+
+def main(report):
+    for r in rows():
+        name = f"table5/bert/{r['strategy']}-P{r['P']}-L{r['PDPLC']}"
+        report(name, 0.0,
+               f"GF={r['total_gflops']}(paper {r['paper_total']}) "
+               f"/dev={r['per_device_gflops']}(paper {r['paper_per_dev']}) "
+               f"comp+{r['comp_speedup_pct']}% "
+               f"comm+{r['comm_speedup_pct']}%(paper {r['paper_comm']})")

@@ -1,0 +1,65 @@
+"""Paper Table VI — GPT-2, CR sweep 2..10 at P ∈ {2, 3}.
+
+GFLOPs / comm columns are analytic over the real PRISM shapes (like the
+paper's); the BPC-vs-CR accuracy trend is measured on a trained char-LM
+by accuracy_vs_cr.py (CBT/enwik8/text8 are unavailable offline).
+"""
+from __future__ import annotations
+
+from .common import GPT2_SMALL as S, model_flops, comm_elements, speedup
+
+PAPER_PER_DEV = {  # (P, CR) -> paper GFLOPs/device
+    (2, 2): 34.36, (2, 4): 33.30, (2, 6): 32.94, (2, 8): 32.77,
+    (2, 10): 32.64,
+    (3, 2): 24.01, (3, 4): 22.68, (3, 6): 22.24, (3, 8): 21.99,
+    (3, 10): 21.86,
+}
+
+
+def rows():
+    base = model_flops(S, "single", 1, 0)["per_device_gflops"]
+    out = [{
+        "strategy": "single", "P": 1, "CR": "-",
+        "total_gflops": round(model_flops(S, "single", 1, 0)
+                              ["total_gflops"], 2),
+        "per_device_gflops": round(base, 2),
+        "comp_speedup_pct": 0.0, "comm_speedup_pct": "-",
+        "paper_per_dev": 65.71,
+    }]
+    for p in (2, 3):
+        f = model_flops(S, "voltage", p, 0)
+        out.append({
+            "strategy": "voltage", "P": p, "CR": "-",
+            "total_gflops": round(f["total_gflops"], 2),
+            "per_device_gflops": round(f["per_device_gflops"], 2),
+            "comp_speedup_pct": round(
+                speedup(base, f["per_device_gflops"]), 2),
+            "comm_speedup_pct": 0.0,
+            "paper_per_dev": {2: 36.49, 3: 26.74}[p],
+        })
+    for p in (2, 3):
+        for cr in range(2, 11):
+            L = max(1, int(S.n // (cr * p)))          # Eq. 16
+            f = model_flops(S, "prism", p, L)
+            volt = comm_elements(S, "voltage", p, 0)
+            ours = comm_elements(S, "prism", p, L)
+            out.append({
+                "strategy": "prism", "P": p, "CR": cr,
+                "total_gflops": round(f["total_gflops"], 2),
+                "per_device_gflops": round(f["per_device_gflops"], 2),
+                "comp_speedup_pct": round(
+                    speedup(base, f["per_device_gflops"]), 2),
+                "comm_speedup_pct": round(speedup(volt, ours), 2),
+                "paper_per_dev": PAPER_PER_DEV.get((p, cr), "-"),
+            })
+    return out
+
+
+def main(report):
+    for r in rows():
+        name = f"table6/gpt2/{r['strategy']}-P{r['P']}-CR{r['CR']}"
+        report(name, 0.0,
+               f"/dev={r['per_device_gflops']}GF"
+               f"(paper {r['paper_per_dev']}) "
+               f"comp+{r['comp_speedup_pct']}% "
+               f"comm+{r['comm_speedup_pct']}%")

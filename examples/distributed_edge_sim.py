@@ -1,0 +1,110 @@
+"""Paper-faithful edge simulation: the master/worker protocol of Fig. 1
+executed literally — a master partitions the input (Alg. 1), P 'device'
+objects exchange Segment Means between blocks (no shard_map; explicit
+per-device state), and the outputs are compared against single-device
+inference, with per-block communication metered in bytes.
+
+    PYTHONPATH=src python examples/distributed_edge_sim.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import prism_attention
+from repro.core.protocol import PrismConfig, partition_bounds
+from repro.core.segment_means import (segment_means, segment_bounds,
+                                      segment_sizes)
+from repro.core.masks import visibility, exact_cols
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.layers import (attn_project_q, attn_project_kv,
+                                 attn_output, mlp, norm)
+
+cfg = ModelConfig(
+    name="edge-sim", arch_type="dense", n_layers=3, d_model=96,
+    n_heads=3, n_kv_heads=3, head_dim=32, d_ff=192, vocab_size=128,
+    mlp_kind="gelu", norm_kind="rmsnorm", pos="rope")
+P, CR, N = 3, 4.0, 48
+params = T.init(cfg, jax.random.PRNGKey(0))
+tokens = jax.random.randint(jax.random.PRNGKey(1), (1, N), 0, 128)
+
+
+class EdgeDevice:
+    """One worker: owns a partition, computes a block, publishes means."""
+
+    def __init__(self, pid, x_p, start):
+        self.pid, self.x, self.start = pid, x_p, start
+        self.bytes_tx = 0
+
+    def publish(self, L):
+        z = segment_means(self.x, L)
+        self.bytes_tx += (P - 1) * z.size * 4        # unicast, like paper
+        lo, hi = segment_bounds(self.x.shape[1], L, offset=self.start)
+        return z, lo, hi, segment_sizes(self.x.shape[1], L)
+
+    def block(self, layer_params, remote, L):
+        n_p = self.x.shape[1]
+        others = [r for r in remote if r[0] != self.pid]
+        z_all = jnp.concatenate([z for _, z, *_ in others], axis=1)
+        x_hat = jnp.concatenate([self.x, z_all], axis=1)
+        row = np.arange(n_p) + self.start
+        lo = np.concatenate([row] + [o[2] for o in others])
+        hi = np.concatenate([row] + [o[3] for o in others])
+        g = np.concatenate([np.ones(n_p)]
+                           + [o[4].astype(np.float64) for o in others])
+        mask = visibility(jnp.asarray(row), jnp.asarray(lo),
+                          jnp.asarray(hi), causal=True)
+        spec = T.attn_spec(cfg, "attn")
+        p = layer_params
+        xq_n = norm(p["ln1"], self.x, cfg.norm_kind)
+        xh_n = norm(p["ln1"], x_hat, cfg.norm_kind)
+        mid = (lo + hi) / 2.0
+        q = attn_project_q(p["attn"], spec, xq_n, jnp.asarray(row, jnp.float32))
+        k, v = attn_project_kv(p["attn"], spec, xh_n,
+                               jnp.asarray(mid, jnp.float32))
+        o = prism_attention(q, k, v, g=jnp.asarray(g, jnp.float32),
+                            mask=mask)
+        x = self.x + attn_output(p["attn"], o)
+        x = x + mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_kind),
+                    cfg.mlp_kind)
+        self.x = x
+
+
+def main():
+    # master: embed + partition (Alg. 1)
+    x = T.embed_inputs(cfg, params, tokens)
+    L = max(1, int(N // (CR * P)))
+    devices = [EdgeDevice(p, x[:, s:s + sz], s)
+               for p, (s, sz) in enumerate(partition_bounds(N, P))]
+
+    for kind, layer in T.iter_layers(cfg, params):
+        remote = []
+        for d in devices:
+            z, lo, hi, sizes = d.publish(L)
+            remote.append((d.pid, z, lo, hi, sizes))
+        for d in devices:
+            d.block(layer, remote, L)
+
+    # master: gather partitions, final norm + head
+    x_out = jnp.concatenate([d.x for d in devices], axis=1)
+    x_out = norm(params["final_norm"], x_out, cfg.norm_kind)
+    logits = x_out @ params["embed"]["table"].T
+
+    ref, _ = T.forward(cfg, params, tokens)
+    err = float(jnp.abs(logits - ref).max() / jnp.abs(ref).max())
+    tx = sum(d.bytes_tx for d in devices)
+    volt_tx = cfg.n_layers * P * (P - 1) * (N // P) * cfg.d_model * 4
+    print(f"P={P} CR={CR} L={L}: rel-err vs single-device = {err:.3f}")
+    print(f"bytes exchanged: PRISM {tx:,} vs Voltage {volt_tx:,} "
+          f"({100 * (1 - tx / volt_tx):.1f}% saved)")
+    assert tx < volt_tx / 2
+    print("edge simulation OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: the PRISM protocol in 60 lines.
+
+Builds a tiny decoder, runs the same input three ways —
+single-device, Voltage (full exchange), PRISM (Segment-Means exchange) —
+and prints output agreement + the per-layer communication each mode costs.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.protocol import (PrismConfig,
+                                 comm_elements_per_device_per_layer)
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.context import SimulatedContext
+
+cfg = ModelConfig(
+    name="quickstart", arch_type="dense", n_layers=4, d_model=128,
+    n_heads=4, n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=256,
+    mlp_kind="swiglu", norm_kind="rmsnorm", pos="rope")
+
+params = T.init(cfg, jax.random.PRNGKey(0))
+tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, 256)
+
+single, _ = T.forward(cfg, params, tokens)
+
+P = 4
+results = {}
+for mode, cr in (("voltage", 1.0), ("prism", 2.0), ("prism", 8.0)):
+    pc = PrismConfig(P=P, cr=cr, mode=mode)
+    logits, _ = T.forward(cfg, params, tokens,
+                          ctx=SimulatedContext(pc))
+    err = float(jnp.abs(logits - single).max() / jnp.abs(single).max())
+    comm = comm_elements_per_device_per_layer(64, cfg.d_model, pc)
+    name = f"{mode}(CR={cr})"
+    results[name] = (err, comm)
+    print(f"{name:16s} rel-err vs single = {err:.2e}   "
+          f"comm/device/layer = {comm:8.0f} elements")
+
+assert results["voltage(CR=1.0)"][0] < 1e-5, "Voltage must be exact"
+assert results["prism(CR=8.0)"][1] < results["voltage(CR=1.0)"][1] / 5, \
+    "PRISM must slash communication"
+print("\nPRISM trades a small approximation error for a large "
+      "communication saving — exactly the paper's pitch.")

@@ -1,0 +1,64 @@
+"""Batched serving demo: prefill a batch of prompts through the
+sequence-sharded runtime, then decode tokens with the exact
+(flash-decoding) and prism (Segment-Means cache) modes and compare.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.protocol import PrismConfig
+    from repro.models import transformer as T
+    from repro.runtime.serve import (ServeHParams, grow_cache,
+                                     make_prefill_step, make_serve_step)
+
+    if len(jax.devices()) < 8:
+        print("set XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        sys.exit(1)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = get_config("gemma3-1b").reduced()
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    B, n, gen = 8, 64, 12
+    cap = n + gen + (-(n + gen)) % 4
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, n), 1,
+                                 cfg.vocab_size)
+
+    outs = {}
+    for mode in ("exact", "prism"):
+        hp = ServeHParams(decode_mode=mode, means_cr=4.0, ssm_chunk=8)
+        prism = PrismConfig(
+            P=4, cr=4.0, mode="prism" if mode == "prism" else "voltage")
+        prefill, lay_p, _, _ = make_prefill_step(
+            cfg, mesh, params, prism, batch=B, n=n, hp=hp)
+        logits, cache = prefill(params, {"tokens": prompts})
+        step, lay_d, _, _ = make_serve_step(
+            cfg, mesh, params, batch=B, cap=cap, prefill_len=n, hp=hp)
+        cache = grow_cache(cache, lay_p, lay_d)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = [np.asarray(tok)]
+        for g in range(gen - 1):
+            logits, cache = step(params, cache, tok,
+                                 jnp.asarray(n + g, jnp.int32))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(np.asarray(tok))
+        outs[mode] = np.stack(toks, 1)
+        print(f"[{mode:5s}] generated:\n{outs[mode][:3]}")
+
+    agree = (outs["exact"] == outs["prism"]).mean()
+    print(f"\nexact-vs-prism greedy token agreement: {agree:.1%} "
+          "(prism approximates remote context by Segment Means; "
+          "agreement rises with lower CR)")
+
+
+if __name__ == "__main__":
+    main()

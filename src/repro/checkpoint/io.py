@@ -1,0 +1,49 @@
+"""Flat-key .npz checkpointing for arbitrary pytrees (params + opt state).
+
+Keys are '/'-joined tree paths; restore rebuilds into a provided
+template tree (so dtypes/shardings are re-applied by the caller)."""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(dirpath: str, step: int, tree) -> str:
+    os.makedirs(dirpath, exist_ok=True)
+    path = os.path.join(dirpath, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(dirpath: str) -> int | None:
+    if not os.path.isdir(dirpath):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(dirpath)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(dirpath: str, step: int, template):
+    path = os.path.join(dirpath, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    flat_paths = ["/".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
+    leaves = [data[k].astype(np.asarray(t).dtype)
+              for k, t in zip(flat_paths, leaves_t)]
+    return treedef.unflatten(leaves)

@@ -1,0 +1,34 @@
+"""Architecture registry: ``get_config("<arch-id>")`` for every assigned
+architecture (plus the paper's own three models)."""
+from __future__ import annotations
+
+import importlib
+
+# arch-id -> module name
+_REGISTRY = {
+    "command-r-35b": "command_r_35b",
+    "musicgen-medium": "musicgen_medium",
+    "gemma-7b": "gemma_7b",
+    "paligemma-3b": "paligemma_3b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "yi-6b": "yi_6b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "gemma3-1b": "gemma3_1b",
+    "arctic-480b": "arctic_480b",
+    # paper models
+    "vit-b16": "vit_b16",
+    "bert-base": "bert_base",
+    "gpt2-small": "gpt2_small",
+}
+
+ASSIGNED_ARCHS = tuple(list(_REGISTRY)[:10])
+PAPER_ARCHS = ("vit-b16", "bert-base", "gpt2-small")
+ALL_ARCHS = tuple(_REGISTRY)
+
+
+def get_config(arch: str):
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+    return mod.CONFIG

@@ -1,0 +1,14 @@
+from repro.models.config import ModelConfig
+
+# MusicGen-medium decoder [arXiv:2306.05284]
+# audio: 48L d_model=1536 24H (kv=24) d_ff=6144 vocab=2048 (EnCodec codes).
+# Frontend (EnCodec conv codec) is a stub per the assignment carve-out:
+# input_specs() provides precomputed frame embeddings.
+CONFIG = ModelConfig(
+    name="musicgen-medium", arch_type="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab_size=2048,
+    mlp_kind="gelu", norm_kind="layernorm", pos="sincos",
+    attn_bias=False, tie_embeddings=False, frontend="encodec_stub",
+    source="arXiv:2306.05284",
+)

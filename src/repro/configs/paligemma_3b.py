@@ -1,0 +1,16 @@
+from repro.models.config import ModelConfig
+
+# PaliGemma 3B [arXiv:2407.07726]
+# vlm: 18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=257216.
+# SigLIP vision tower is a stub (assignment carve-out): input_specs()
+# provides 256 patch embeddings; the image prefix attends bidirectionally
+# (prefix-LM) — the partition-aware mask generalizes via prefix_len.
+CONFIG = ModelConfig(
+    name="paligemma-3b", arch_type="vlm",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=257216,
+    mlp_kind="geglu", norm_kind="rmsnorm", pos="rope",
+    embed_scale=True, tie_embeddings=True,
+    frontend="siglip_stub", prefix_len=256,
+    source="arXiv:2407.07726",
+)

@@ -1,0 +1,16 @@
+from repro.models.config import ModelConfig
+
+# Zamba2 2.7B [arXiv:2411.15242]
+# hybrid: 54 Mamba2 layers (ssm_state=64) with a SHARED attention+MLP
+# block interleaved every 6th layer (weight sharing), d_model=2560,
+# 32H (kv=32), shared-MLP d_ff=10240, vocab=32000.
+_blocks = tuple("shared_attn" if i % 6 == 5 else "mamba" for i in range(54))
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", arch_type="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab_size=32000, blocks=_blocks,
+    mlp_kind="gelu", norm_kind="rmsnorm", pos="rope",
+    ssm_state=64, ssm_heads=32, ssm_expand=2, ssm_conv=4,
+    shared_attn_every=6, tie_embeddings=False,
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,166 @@
+"""PRISM attention: scaling-aware softmax over compressed K/V (paper §IV-C).
+
+The restructured attention (Eq. 13–15) never materializes duplicated
+segment-mean rows.  Given per-column repeat counts ``g`` (1 for exact local
+tokens, ``n_l`` for a mean that summarizes ``n_l`` tokens):
+
+    Ψ = exp(Q K̂ᵀ / √d)            (Eq. 13)
+    E = Ψ ⊙ g                      (Eq. 14, column-wise)
+    A = rownorm(E) · V̂            (Eq. 15)
+
+which equals ordinary softmax attention over the row-duplicated K/V
+(exponentiation/multiplication associativity).  Numerically we fold the
+scaling into the logits as ``+ log g`` and run a standard stable softmax —
+the identity ``g · e^x = e^{x + log g}`` — which is also what the Pallas
+kernel streams.
+
+All functions take multi-head tensors with GQA layout:
+    q: (B, Nq, Hq, hd)    k, v: (B, M, Hkv, hd)     Hq % Hkv == 0
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .masks import NEG_INF
+
+
+def _gqa_logits(q: jnp.ndarray, k: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """(B, Hq, Nq, M) attention logits with KV-head grouping."""
+    b, nq, hq, hd = q.shape
+    _, m, hkv, _ = k.shape
+    assert hq % hkv == 0, f"Hq={hq} not a multiple of Hkv={hkv}"
+    grp = hq // hkv
+    qg = q.reshape(b, nq, hkv, grp, hd)
+    logits = jnp.einsum("bnkgh,bmkh->bkgnm", qg, k) * scale
+    return logits.reshape(b, hq, nq, m)
+
+
+def _gqa_output(weights: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """(B, Hq, Nq, M) @ (B, M, Hkv, hd) -> (B, Nq, Hq, hd)."""
+    b, hq, nq, m = weights.shape
+    hkv = v.shape[2]
+    grp = hq // hkv
+    wg = weights.reshape(b, hkv, grp, nq, m)
+    out = jnp.einsum("bkgnm,bmkh->bnkgh", wg, v)
+    return out.reshape(b, nq, hq, v.shape[-1])
+
+
+def scaling_softmax(
+    logits: jnp.ndarray,          # (..., M)
+    log_g: jnp.ndarray | None,    # (M,) or broadcastable; None => all-ones g
+    mask: jnp.ndarray | None,     # bool (..., M) or (Nq, M); True = attend
+) -> jnp.ndarray:
+    """Stable softmax of ``logits + log g`` with masking (Eq. 14 rewrite)."""
+    x = logits.astype(jnp.float32)
+    if log_g is not None:
+        x = x + log_g.astype(jnp.float32)
+    if mask is not None:
+        x = jnp.where(mask, x, NEG_INF)
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    if mask is not None:
+        # fully-masked rows: max-subtraction turns NEG_INF-NEG_INF into 0,
+        # so re-zero masked entries -> such rows yield 0, not uniform
+        e = jnp.where(mask, e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(denom, 1e-30)
+
+
+def prism_attention(
+    q: jnp.ndarray,               # (B, Nq, Hq, hd)  local-partition queries
+    k_hat: jnp.ndarray,           # (B, M, Hkv, hd)  augmented (local + means)
+    v_hat: jnp.ndarray,           # (B, M, Hkv, hd)
+    g: jnp.ndarray | None = None, # (M,) repeat counts; None = exact attention
+    mask: jnp.ndarray | None = None,  # bool (Nq, M) or (B, 1|Hq, Nq, M)
+    *,
+    scale: float | None = None,
+    block: int = 0,               # >0: stream K/V in blocks (flash-style)
+) -> jnp.ndarray:
+    """Scaling-aware attention (Eq. 15).  With g=None and an ordinary causal
+    mask this is exact softmax attention — the single-device baseline.
+
+    ``block``: stream the K/V columns in blocks with a running
+    max/normalizer (the XLA-level analogue of the Pallas flash kernel) —
+    the (B,Hq,Nq,M) logits tensor is never materialized, cutting the
+    training/prefill HBM peak (§Perf H3).  Falls back to the dense path
+    for small M or batched masks."""
+    hd = q.shape[-1]
+    scale = (hd ** -0.5) if scale is None else scale
+    if (block and k_hat.shape[1] > 2 * block
+            and (mask is None or mask.ndim == 2)):
+        return _streamed_attention(q, k_hat, v_hat, g, mask,
+                                   scale=scale, block=block)
+    logits = _gqa_logits(q, k_hat, scale)
+    log_g = None if g is None else jnp.log(g.astype(jnp.float32))
+    if mask is not None and mask.ndim == 2:
+        mask = mask[None, None]
+    w = scaling_softmax(logits, log_g, mask)
+    return _gqa_output(w.astype(v_hat.dtype), v_hat)
+
+
+def _streamed_attention(q, k_hat, v_hat, g, mask, *, scale, block):
+    """lax.scan over K/V column blocks with running (m, l, acc) — the
+    Eq. 13-15 softmax in streaming form (cf. kernels/prism_attention.py,
+    which is the same algorithm as a Pallas VMEM kernel)."""
+    b, nq, hq, hd = q.shape
+    m_cols = k_hat.shape[1]
+    pad = (-m_cols) % block
+    if pad:
+        widths = [(0, 0)] * 4
+        widths[1] = (0, pad)
+        k_hat = jnp.pad(k_hat, widths)
+        v_hat = jnp.pad(v_hat, widths)
+        if g is None:
+            g = jnp.ones((m_cols,), jnp.float32)
+        g = jnp.pad(g.astype(jnp.float32), (0, pad))      # pad g=0 -> dead
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    mt = k_hat.shape[1]
+    nb = mt // block
+    log_g = (jnp.where(g > 0, jnp.log(jnp.maximum(
+        g.astype(jnp.float32), 1e-30)), NEG_INF)
+        if g is not None else jnp.zeros((mt,), jnp.float32))
+    if pad and g is None:
+        dead = jnp.arange(mt) >= m_cols
+        log_g = jnp.where(dead, NEG_INF, log_g)
+
+    kb = k_hat.reshape(b, nb, block, *k_hat.shape[2:]).swapaxes(0, 1)
+    vb = v_hat.reshape(b, nb, block, *v_hat.shape[2:]).swapaxes(0, 1)
+    lgb = log_g.reshape(nb, block)
+    maskb = (mask.reshape(nq, nb, block).swapaxes(0, 1)
+             if mask is not None else None)
+
+    m0 = jnp.full((b, hq, nq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, nq, 1), jnp.float32)
+    a0 = jnp.zeros((b, nq, hq, hd), jnp.float32)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        if maskb is None:
+            k_c, v_c, lg_c = xs
+            msk = None
+        else:
+            k_c, v_c, lg_c, msk = xs
+        s = _gqa_logits(q, k_c, scale).astype(jnp.float32)
+        s = s + lg_c[None, None, None, :]
+        if msk is not None:
+            s = jnp.where(msk[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(-1, keepdims=True))
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(s > NEG_INF / 2, p, 0.0)
+        l_new = l_run * corr + p.sum(-1, keepdims=True)
+        part = _gqa_output(p.astype(v_c.dtype), v_c).astype(jnp.float32)
+        acc = acc * corr[:, :, :, 0].swapaxes(1, 2)[..., None] + part
+        return (m_new, l_new, acc), None
+
+    xs = (kb, vb, lgb) if maskb is None else (kb, vb, lgb, maskb)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    denom = jnp.maximum(l_f[:, :, :, 0].swapaxes(1, 2)[..., None], 1e-30)
+    return (acc / denom).astype(v_hat.dtype)
+
+
+def exact_attention(q, k, v, mask=None, *, scale=None):
+    """Plain softmax attention (no compression) — Voltage / no-partition."""
+    return prism_attention(q, k, v, g=None, mask=mask, scale=scale)

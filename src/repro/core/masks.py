@@ -1,0 +1,96 @@
+"""Partition-aware attention masks (paper §IV-D, Eq. 17), generalized.
+
+Every column of the augmented K/V matrix ``X̂_p = [X_p ; Z_q …]`` covers a
+*range* of global token positions: an exact local token covers ``[i, i]``;
+a segment mean covers ``[lo, hi]`` — the first/last global position of the
+tokens it aggregates.  A single rule then expresses all the mask variants
+PRISM needs:
+
+    visible(row i, col [lo, hi]) =
+        (not causal)            OR  hi <= pos(i)          # strictly past/self
+        OR hi < prefix_len                                 # prefix-LM bidirectional prefix
+    AND (window is None OR lo > pos(i) - window)           # sliding window
+
+With exact columns (lo == hi == j) and causal=True this reduces to the
+standard lower-triangular mask; for a remote *preceding* partition's means
+``hi < start_p`` so they are fully visible, and for a *following* partition
+``lo > pos(i)`` so they are fully masked — exactly Eq. 17.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps bf16 finite
+
+
+def visibility(
+    row_pos: jnp.ndarray,       # (Nq,)  global positions of query rows
+    col_lo: jnp.ndarray,        # (M,)   first global position covered by col
+    col_hi: jnp.ndarray,        # (M,)   last  global position covered by col
+    *,
+    causal: bool,
+    prefix_len: int = 0,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Boolean (Nq, M) mask; True = attend."""
+    r = row_pos[:, None]
+    if causal:
+        vis = col_hi[None, :] <= r
+        if prefix_len > 0:
+            vis = vis | (col_hi[None, :] < prefix_len)
+    else:
+        vis = jnp.ones((row_pos.shape[0], col_lo.shape[0]), dtype=bool)
+    if window is not None:
+        vis = vis & (col_lo[None, :] > r - window)
+    return vis
+
+
+def visibility_np(row_pos, col_lo, col_hi, *, causal: bool,
+                  prefix_len: int = 0, window=None) -> np.ndarray:
+    """Pure-numpy visibility — for STATIC masks built at trace time
+    (SimulatedContext): jnp ops on constants still produce tracers inside
+    jit, so static mask construction must stay in numpy."""
+    r = np.asarray(row_pos)[:, None]
+    lo = np.asarray(col_lo)[None, :]
+    hi = np.asarray(col_hi)[None, :]
+    if causal:
+        vis = hi <= r
+        if prefix_len > 0:
+            vis = vis | (hi < prefix_len)
+    else:
+        vis = np.ones((r.shape[0], lo.shape[1]), bool)
+    if window is not None:
+        vis = vis & (lo > r - window)
+    return vis
+
+
+def partition_causal_mask(
+    n_p: int,
+    partition_start: int,
+    col_lo: np.ndarray,
+    col_hi: np.ndarray,
+    *,
+    prefix_len: int = 0,
+    window: int | None = None,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Eq. 17 mask for one device: rows are the local partition's tokens
+    (global positions ``partition_start .. partition_start + n_p - 1``),
+    columns described by (lo, hi) position ranges."""
+    row_pos = jnp.arange(n_p) + partition_start
+    return visibility(
+        row_pos, jnp.asarray(col_lo), jnp.asarray(col_hi),
+        causal=causal, prefix_len=prefix_len, window=window,
+    )
+
+
+def mask_to_bias(mask: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Boolean mask -> additive bias (0 / NEG_INF)."""
+    return jnp.where(mask, jnp.zeros((), dtype), jnp.full((), NEG_INF, dtype))
+
+
+def exact_cols(n: int, offset: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """(lo, hi) ranges for n exact (uncompressed) columns."""
+    pos = np.arange(n) + offset
+    return pos, pos

@@ -1,0 +1,193 @@
+"""The PRISM per-block exchange protocol (paper §III, Fig. 1).
+
+Position-wise partitioning (Alg. 1) splits the sequence into ``P``
+contiguous partitions.  After every Transformer block each device compresses
+its partition output into ``L`` segment means (Alg. 2) and all-gathers the
+means; each device then augments its local partition with the received
+means (Eq. 6), attends with the scaling-aware softmax (Eq. 13–15) under the
+partition-aware mask (Eq. 17).
+
+This module is the *protocol* — partition bookkeeping, augmentation,
+repeat-count vectors, per-device masks, and communication accounting — in
+host-side simulation form (a loop over P logical devices on one chip).  The
+sharded runtime (`repro.sharding`, `repro.runtime`) executes the same math
+under `shard_map`, with the all-gather over the ``model`` mesh axis; tests
+assert the two paths agree.
+
+Modes:
+    'prism'       Segment-Means exchange, scaling-aware softmax (this paper)
+    'voltage'     full-partition exchange, exact attention      (baseline [20])
+    'duplicate'   Segment-Means exchange, duplicated rows       (Table II ablation)
+    'prism_nodup' Segment-Means exchange, NO duplication (g=1)  (Table II 'No' column)
+    'single'      no partitioning                               (no-partition row)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from .segment_means import (
+    segment_means, segment_sizes, segment_bounds, duplicate_means,
+    num_landmarks,
+)
+from .masks import visibility, exact_cols
+
+MODES = ("prism", "voltage", "duplicate", "prism_nodup", "single")
+
+
+@dataclass(frozen=True)
+class PrismConfig:
+    """Everything a device needs to know about the exchange."""
+    P: int = 1                    # partitions == devices on the sequence axis
+    cr: float = 1.0               # compression rate (Eq. 16); L = N/(CR*P)
+    L: int | None = None          # explicit landmark count overrides cr
+    mode: str = "prism"
+    causal: bool = True
+    prefix_len: int = 0           # prefix-LM (VLM image prefix)
+    window: int | None = None     # sliding-window layers (gemma3 local)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.P < 1:
+            raise ValueError("P >= 1 required")
+
+    def landmarks(self, n: int) -> int:
+        if self.L is not None:
+            return self.L
+        return num_landmarks(n, self.cr, self.P)
+
+    def with_(self, **kw) -> "PrismConfig":
+        return replace(self, **kw)
+
+
+def partition_bounds(n: int, p: int) -> list[tuple[int, int]]:
+    """Alg. 1: (start, size) per partition; last takes the remainder."""
+    s, r = divmod(n, p)
+    if s == 0:
+        raise ValueError(f"cannot split N={n} into P={p} partitions")
+    out, start = [], 0
+    for i in range(p):
+        size = s + (r if i == p - 1 else 0)
+        out.append((start, size))
+        start += size
+    return out
+
+
+def partition(x: jnp.ndarray, p: int, axis: int = -2) -> list[jnp.ndarray]:
+    """Alg. 1 applied to an array along the sequence axis."""
+    n = x.shape[axis]
+    idx = [slice(None)] * x.ndim
+    parts = []
+    for start, size in partition_bounds(n, p):
+        idx[axis] = slice(start, start + size)
+        parts.append(x[tuple(idx)])
+    return parts
+
+
+@dataclass(frozen=True)
+class DeviceView:
+    """What device ``p`` sees for one block's attention."""
+    p: int
+    x_p: jnp.ndarray              # (..., N_p, D) local partition (queries)
+    x_hat: jnp.ndarray            # (..., M, D)  augmented K/V source (Eq. 6)
+    g: np.ndarray | None          # (M,) repeat counts; None => exact
+    col_lo: np.ndarray            # (M,) global position ranges per column
+    col_hi: np.ndarray
+    row_pos: np.ndarray           # (N_p,) global positions of local rows
+
+    def mask(self, cfg: PrismConfig) -> jnp.ndarray:
+        return visibility(
+            jnp.asarray(self.row_pos), jnp.asarray(self.col_lo),
+            jnp.asarray(self.col_hi), causal=cfg.causal,
+            prefix_len=cfg.prefix_len, window=cfg.window,
+        )
+
+
+def device_views(x: jnp.ndarray, cfg: PrismConfig) -> list[DeviceView]:
+    """Build every device's augmented view of hidden states ``x (..., N, D)``.
+
+    Column order per Eq. 6 / Eq. 17: local partition first, then the other
+    partitions' summaries in ascending partition order (so the means of all
+    *preceding* partitions occupy a contiguous visible span — Fig. 3c).
+    """
+    n = x.shape[-2]
+    bounds = partition_bounds(n, cfg.P)
+    parts = partition(x, cfg.P)
+
+    if cfg.mode == "single" or cfg.P == 1:
+        lo, hi = exact_cols(n)
+        return [DeviceView(0, x, x, None, lo, hi, np.arange(n))]
+
+    if cfg.mode == "voltage":
+        lo, hi = exact_cols(n)
+        views = []
+        for p, (start, size) in enumerate(bounds):
+            views.append(DeviceView(
+                p, parts[p], x, None, lo, hi, np.arange(size) + start))
+        return views
+
+    # ---- prism / duplicate: compress each partition ----
+    L = cfg.landmarks(n)
+    z, sizes, zlo, zhi = [], [], [], []
+    for p, (start, size) in enumerate(bounds):
+        if L > size:
+            raise ValueError(
+                f"L={L} exceeds partition size {size}; lower cr or P")
+        z.append(segment_means(parts[p], L))
+        sizes.append(segment_sizes(size, L))
+        lo, hi = segment_bounds(size, L, offset=start)
+        zlo.append(lo)
+        zhi.append(hi)
+
+    views = []
+    for p, (start, size) in enumerate(bounds):
+        others = [q for q in range(cfg.P) if q != p]
+        if cfg.mode == "duplicate":
+            remote = [duplicate_means(z[q], bounds[q][1]) for q in others]
+            g = None
+            r_lo = [np.repeat(zlo[q], sizes[q]) for q in others]
+            r_hi = [np.repeat(zhi[q], sizes[q]) for q in others]
+        else:
+            remote = [z[q] for q in others]
+            if cfg.mode == "prism_nodup":        # Table II 'No' column
+                g = np.ones(size + (cfg.P - 1) * L, np.int64)
+            else:
+                g = np.concatenate(
+                    [np.ones(size, np.int64)] + [sizes[q] for q in others])
+            r_lo = [zlo[q] for q in others]
+            r_hi = [zhi[q] for q in others]
+        x_hat = jnp.concatenate([parts[p]] + remote, axis=-2)
+        loc_lo, loc_hi = exact_cols(size, offset=start)
+        views.append(DeviceView(
+            p, parts[p], x_hat, g,
+            np.concatenate([loc_lo] + r_lo),
+            np.concatenate([loc_hi] + r_hi),
+            np.arange(size) + start,
+        ))
+    return views
+
+
+def comm_elements_per_device_per_layer(n: int, d: int, cfg: PrismConfig) -> float:
+    """Elements each device transmits per Transformer block (paper §IV-C)."""
+    if cfg.P == 1 or cfg.mode == "single":
+        return 0.0
+    if cfg.mode == "voltage":
+        return (cfg.P - 1) * n * d / cfg.P
+    L = cfg.landmarks(n)
+    return float((cfg.P - 1) * L * d)
+
+
+def tensor_parallel_comm(n: int, d: int, p: int) -> float:
+    """Megatron-style TP per-device per-layer traffic: 4(P-1)ND/P (§II-B2)."""
+    return 4 * (p - 1) * n * d / p
+
+
+def comm_speedup(n: int, d: int, cfg: PrismConfig) -> float:
+    """Paper's 'Comm. Speed-up %' = 1 - prism/voltage."""
+    volt = comm_elements_per_device_per_layer(n, d, cfg.with_(mode="voltage"))
+    ours = comm_elements_per_device_per_layer(n, d, cfg)
+    return 100.0 * (1.0 - ours / volt) if volt else 0.0

@@ -1,0 +1,72 @@
+"""Segment Means compression (paper §IV-B, Algorithm 2).
+
+A partition ``X_p ∈ R^{..., N_p, D}`` is divided into ``L`` contiguous,
+non-overlapping segments: the first ``L-1`` of size ``s = floor(N_p / L)``
+and the last of size ``s + (N_p mod L)``.  The column-wise mean of each
+segment is its *segment mean*; the stacked means ``Z_p ∈ R^{..., L, D}``
+are what PRISM exchanges between devices instead of the full partition.
+
+All shapes are static at trace time, so the ragged last segment is handled
+with two static slices — no dynamic shapes, no gather.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def segment_sizes(n_p: int, L: int) -> np.ndarray:
+    """Per-segment token counts ``n_l`` (paper Eq. 8): [s]*(L-1) + [s+r]."""
+    if not 1 <= L <= n_p:
+        raise ValueError(f"need 1 <= L <= N_p, got L={L}, N_p={n_p}")
+    s, r = divmod(n_p, L)
+    sizes = np.full(L, s, dtype=np.int64)
+    sizes[-1] += r
+    return sizes
+
+
+def segment_bounds(n_p: int, L: int, offset: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """(lo, hi) inclusive global-position bounds of each segment's tokens.
+
+    ``offset`` shifts into global sequence coordinates (partition start).
+    Used by the partition-aware mask: a mean column is causally visible to
+    a query at global position ``i`` iff ``hi <= i``.
+    """
+    sizes = segment_sizes(n_p, L)
+    ends = np.cumsum(sizes)
+    starts = ends - sizes
+    return starts + offset, ends - 1 + offset
+
+
+def segment_means(x: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Compress ``x (..., N_p, D)`` to ``(..., L, D)`` segment means."""
+    n_p = x.shape[-2]
+    if not 1 <= L <= n_p:
+        raise ValueError(f"need 1 <= L <= N_p, got L={L}, N_p={n_p}")
+    s = n_p // L
+    if L == 1:
+        return x.mean(axis=-2, keepdims=True)
+    head = x[..., : s * (L - 1), :]
+    head = head.reshape(*x.shape[:-2], L - 1, s, x.shape[-1]).mean(axis=-2)
+    tail = x[..., s * (L - 1):, :].mean(axis=-2, keepdims=True)
+    return jnp.concatenate([head, tail], axis=-2)
+
+
+def duplicate_means(z: jnp.ndarray, n_p: int) -> jnp.ndarray:
+    """Expand means back to ``(..., N_p, D)`` by per-segment repetition
+    (paper Eq. 11, ``Y_p``).  Only used by the reference/oracle path and
+    the Table-II ablation — PRISM proper never materializes this."""
+    L = z.shape[-2]
+    sizes = segment_sizes(n_p, L)
+    idx = np.repeat(np.arange(L), sizes)
+    return jnp.take(z, jnp.asarray(idx), axis=-2)
+
+
+def num_landmarks(n: int, cr: float, p: int) -> int:
+    """L = floor(N / (CR * P)) (paper Eq. 16), clamped to >= 1."""
+    return max(1, int(n // (cr * p)))
+
+
+def compression_rate(n: int, L: int, p: int) -> float:
+    """The effective CR achieved by a given L (inverse of Eq. 16)."""
+    return n / (L * p)

@@ -1,0 +1,1 @@
+from .pipeline import CharTokenizer, synthetic_text, lm_batches, classification_batches  # noqa: F401

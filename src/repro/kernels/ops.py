@@ -1,0 +1,70 @@
+"""Jitted public wrapper around the PRISM flash-attention Pallas kernel.
+
+Handles layout (B,N,H,hd ↔ B,H,N,hd), block-multiple padding (padded
+columns get g=0 ⇒ log g = -1e30 ⇒ zero attention weight), and the
+interpret-mode switch (CPU validation vs TPU execution).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .prism_attention import prism_flash_attention, NEG
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "prefix_len", "window", "scale",
+                     "block_q", "block_k", "interpret"))
+def prism_attention_op(
+    q,            # (B, Nq, Hq, hd)
+    k,            # (B, M, Hkv, hd)
+    v,            # (B, M, Hkv, hd)
+    g,            # (M,) float32 repeat counts (0 = masked/padding)
+    col_lo,       # (M,) int32
+    col_hi,       # (M,) int32
+    row_pos,      # (Nq,) int32
+    *,
+    causal: bool = True,
+    prefix_len: int = 0,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    b, nq, hq, hd = q.shape
+    m = k.shape[1]
+    scale = float(hd ** -0.5) if scale is None else scale
+    block_q = min(block_q, max(8, 1 << (nq - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (m - 1).bit_length()))
+
+    qt = _pad_to(q.swapaxes(1, 2), block_q, 2)            # (B,Hq,Nq',hd)
+    kt = _pad_to(k.swapaxes(1, 2), block_k, 2)
+    vt = _pad_to(v.swapaxes(1, 2), block_k, 2)
+    log_g = jnp.where(g > 0, jnp.log(jnp.maximum(g.astype(jnp.float32), 1e-30)), NEG)
+    log_g = _pad_to(log_g[None, :], block_k, 1, value=NEG)
+    lo = _pad_to(col_lo.astype(jnp.int32)[None, :], block_k, 1,
+                 value=np.iinfo(np.int32).max)            # out-of-window too
+    hi = _pad_to(col_hi.astype(jnp.int32)[None, :], block_k, 1,
+                 value=np.iinfo(np.int32).max)
+    rp = _pad_to(row_pos.astype(jnp.int32)[:, None], block_q, 0)
+
+    out = prism_flash_attention(
+        qt, kt, vt, log_g, lo, hi, rp,
+        causal=causal, prefix_len=prefix_len, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out[:, :, :nq].swapaxes(1, 2)                  # (B,Nq,Hq,hd)

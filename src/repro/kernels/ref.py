@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the PRISM scaling-aware flash-attention kernel.
+
+Materializes the full (Nq, M) logits, applies the ``+log g`` column bias and
+the position-range visibility mask, and runs a stable softmax — the direct
+transcription of paper Eq. 13–15 + Eq. 17 that the Pallas kernel must match
+(tests sweep shapes/dtypes with ``interpret=True``)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.attention import _gqa_logits, _gqa_output
+from ..core.masks import NEG_INF
+
+
+def prism_attention_reference(
+    q,            # (B, Nq, Hq, hd)
+    k,            # (B, M, Hkv, hd)
+    v,            # (B, M, Hkv, hd)
+    log_g,        # (M,) float32 — log repeat counts; -inf(=NEG_INF) on padding
+    col_lo,       # (M,) int32 global position ranges per column
+    col_hi,       # (M,) int32
+    row_pos,      # (Nq,) int32 global positions of query rows
+    *,
+    causal: bool,
+    prefix_len: int = 0,
+    window: int | None = None,
+    scale: float | None = None,
+):
+    hd = q.shape[-1]
+    scale = (hd ** -0.5) if scale is None else scale
+    s = _gqa_logits(q, k, scale).astype(jnp.float32)     # (B, Hq, Nq, M)
+    s = s + log_g[None, None, None, :]
+    if causal:
+        vis = col_hi[None, :] <= row_pos[:, None]
+        if prefix_len > 0:
+            vis = vis | (col_hi[None, :] < prefix_len)
+    else:
+        vis = jnp.ones((row_pos.shape[0], col_lo.shape[0]), bool)
+    if window is not None:
+        vis = vis & (col_lo[None, :] > row_pos[:, None] - window)
+    s = jnp.where(vis[None, None], s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    e = jnp.where(vis[None, None] & (log_g > NEG_INF / 2)[None, None, None],
+                  e, 0.0)            # fully-masked rows -> 0, not uniform
+    w = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    return _gqa_output(w.astype(v.dtype), v)

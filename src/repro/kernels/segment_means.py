@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: Segment Means reduction (paper Alg. 2).
+
+Memory-bound: one pass (N_p, D) → (L, D).  Exists to fuse the per-block
+compression with the residual-stream write — on TPU the block output is
+already streaming through VMEM, so computing the means there saves a full
+HBM round-trip over a separate jnp.mean (see EXPERIMENTS.md §Perf).
+
+Grid (L, D/blk_d): each program mean-reduces one (segment × feature-block)
+tile.  Even segments only (N_p % L == 0) — the ragged tail uses the jnp
+path (`repro.core.segment_means`), which is also the kernel's oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref, *, seg: int):
+    o_ref[...] = jnp.mean(
+        x_ref[...].astype(jnp.float32), axis=0, keepdims=True
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "block_d", "interpret"))
+def segment_means_op(x, *, L: int, block_d: int = 512,
+                     interpret: bool = True):
+    """x (B, N_p, D) -> (B, L, D); requires N_p % L == 0."""
+    b, n, d = x.shape
+    assert n % L == 0, "kernel path needs even segments; use jnp fallback"
+    seg = n // L
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+
+    def run(x2):          # (N_p, D) -> (L, D)
+        return pl.pallas_call(
+            functools.partial(_kernel, seg=seg),
+            grid=(L, d // block_d),
+            in_specs=[pl.BlockSpec((seg, block_d), lambda l, j: (l, j))],
+            out_specs=pl.BlockSpec((1, block_d), lambda l, j: (l, j)),
+            out_shape=jax.ShapeDtypeStruct((L, d), x2.dtype),
+            interpret=interpret,
+        )(x2)
+
+    return jax.vmap(run)(x)

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination against ShapeDtypeStruct inputs — no allocation — and
+extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape train_4k [--multipod] [--mode prism|voltage] [--json out]
+
+Shapes of kind 'train' lower ``train_step``; 'prefill' lowers the prefill
+forward; 'decode' lowers ``serve_step`` (ONE new token against a seq_len
+KV cache).  Success = .compile() returns; the printed memory_analysis
+proves per-device fit and cost_analysis feeds §Roofline.
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, ASSIGNED_ARCHS
+from repro.configs.shapes import SHAPES
+from repro.core.protocol import PrismConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.inputs import (train_input_specs, prefill_input_specs,
+                                 decode_input_specs, param_shapes,
+                                 count_params, active_param_fraction)
+from repro.launch.roofline import (Roofline, collective_bytes, model_flops)
+
+
+def lower_train(cfg, mesh, shape, prism, dtype):
+    from repro.optim import adamw_init
+    from repro.runtime.train import make_train_step, TrainHParams
+    params = param_shapes(cfg, dtype)
+    hp = TrainHParams(remat=True, loss_chunks=16)
+    step, rules, psh, osh, bsh = make_train_step(cfg, mesh, params, prism, hp)
+    opt = jax.eval_shape(adamw_init, params)
+    batch = train_input_specs(cfg, shape, dtype)
+    return step.lower(params, opt, batch)
+
+
+def lower_prefill(cfg, mesh, shape, prism, dtype):
+    from repro.runtime.serve import make_prefill_step, ServeHParams
+    params = param_shapes(cfg, dtype)
+    hp = ServeHParams(decode_mode="prism" if prism.mode == "prism"
+                      else "exact", means_cr=prism.cr)
+    step, lay, rules, lspec = make_prefill_step(
+        cfg, mesh, params, prism, batch=shape.global_batch,
+        n=shape.seq_len, hp=hp)
+    batch = prefill_input_specs(cfg, shape, dtype)
+    return step.lower(params, batch)
+
+
+def lower_decode(cfg, mesh, shape, prism, dtype):
+    import os as _os
+    from repro.runtime.serve import (make_serve_step, ServeHParams,
+                                     cache_shapes, make_layout)
+    params = param_shapes(cfg, dtype)
+    hp = ServeHParams(decode_mode="prism" if prism.mode == "prism"
+                      else "exact", means_cr=prism.cr,
+                      decode_tp=_os.environ.get("REPRO_DECODE_TP") == "1")
+    step, lay, rules, lspec = make_serve_step(
+        cfg, mesh, params, batch=shape.global_batch, cap=shape.seq_len,
+        hp=hp)
+    cache = cache_shapes(cfg, lay, shape.global_batch, hp, dtype)
+    token, pos = decode_input_specs(cfg, shape)
+    return step.lower(params, cache, token, pos)
+
+
+_LOWER = {"train": lower_train, "prefill": lower_prefill,
+          "decode": lower_decode}
+
+
+def _one_compile(cfg, mesh, shape, prism, dtype):
+    lowered = _LOWER[shape.kind](cfg, mesh, shape, prism, dtype)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return compiled, {"flops": float(cost.get("flops", 0.0)),
+                      "bytes": float(cost.get("bytes accessed", 0.0)),
+                      **{k: float(coll[k]) for k in
+                         ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute", "total")}}
+
+
+def extrapolated_costs(cfg, mesh, shape, prism, dtype):
+    """XLA's cost_analysis counts a While (lax.scan) body ONCE, so the
+    scanned-layers program under-reports.  Fit cost = base + depth·unit
+    from two small UNROLLED compiles (1 and 2 units) and evaluate at the
+    real depth — exact for repeated identical layers."""
+    from dataclasses import replace
+    u, n_units, n_tail = cfg.scan_split
+    if n_units == 1:                      # already unrolled: trip count 1
+        return None
+    kinds = cfg.block_kinds
+    c1 = replace(cfg, n_layers=u, blocks=kinds[:u], scan_layers=False)
+    c2 = replace(cfg, n_layers=2 * u, blocks=kinds[:u] * 2,
+                 scan_layers=False)
+    _, m1 = _one_compile(c1, mesh, shape, prism, dtype)
+    _, m2 = _one_compile(c2, mesh, shape, prism, dtype)
+    depth_units = cfg.n_layers / u
+    out = {}
+    for k in m1:
+        unit = m2[k] - m1[k]
+        base = m1[k] - unit
+        out[k] = max(0.0, base + depth_units * unit)
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multipod: bool, mode: str,
+            cr: float, dtype=jnp.bfloat16, verbose: bool = True):
+    cfg = get_config(arch)
+    blk = int(os.environ.get("REPRO_ATTN_BLOCK", "0"))
+    if blk:                               # §Perf H3: streaming attention
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, attn_block=blk)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multipod)
+    chips = mesh.devices.size
+    prism = PrismConfig(P=1, cr=cr, mode=mode)   # P is taken from the mesh
+
+    t0 = time.time()
+    lowered = _LOWER[shape.kind](cfg, mesh, shape, prism, dtype)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    fit = extrapolated_costs(cfg, mesh, shape, prism, dtype)
+    if fit is not None:
+        cost = {"flops": fit["flops"], "bytes accessed": fit["bytes"]}
+        coll = {k: fit[k] for k in ("all-gather", "all-reduce",
+                                    "reduce-scatter", "all-to-all",
+                                    "collective-permute", "total")}
+        coll["ops"] = "extrapolated(base + depth*unit)"
+
+    pshapes = param_shapes(cfg, dtype)
+    n_params = count_params(pshapes)
+    frac = active_param_fraction(cfg, pshapes)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mf = model_flops(shape.kind, int(n_params * frac), tokens)
+
+    rl = Roofline(
+        arch=arch, shape=shape_name,
+        mesh="2x16x16" if multipod else "16x16", mode=mode,
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=float(coll["total"]),
+        model_flops=mf, chips=chips)
+
+    rec = rl.row()
+    rec.update(
+        t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+        n_params=n_params, active_frac=round(frac, 4),
+        coll_detail={k: v for k, v in coll.items() if k != "ops"},
+        coll_ops=coll["ops"],
+        mem_argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+        mem_output_bytes=getattr(mem, "output_size_in_bytes", None),
+        mem_temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+        # peak LIVE set (args + max live temps) — the fits-in-HBM check;
+        # temp_size is the SUM of temp allocations, not simultaneous
+        mem_peak_bytes=getattr(mem, "peak_memory_in_bytes", None),
+    )
+    if verbose:
+        print(f"== {arch} × {shape_name} × {rec['mesh']} [{mode}] ==")
+        print(f"  lower {t_lower:.1f}s  compile {t_compile:.1f}s")
+        print(f"  memory_analysis: args={rec['mem_argument_bytes']}, "
+              f"temp={rec['mem_temp_bytes']}, out={rec['mem_output_bytes']}")
+        print(f"  cost_analysis: flops/dev={rl.flops:.3e}, "
+              f"bytes/dev={rl.bytes_accessed:.3e}")
+        print(f"  collectives/dev: {rec['coll_detail']}")
+        print(f"  roofline: compute={rl.t_compute * 1e3:.2f}ms "
+              f"memory={rl.t_memory * 1e3:.2f}ms "
+              f"collective={rl.t_collective * 1e3:.2f}ms "
+              f"-> {rl.bottleneck}-bound")
+        print(f"  MODEL_FLOPS={mf:.3e} useful_frac="
+              f"{rl.useful_flops_frac:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {ASSIGNED_ARCHS} or 'all'")
+    ap.add_argument("--shape", required=True,
+                    help=f"one of {tuple(SHAPES)} or 'all'")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--mode", default="prism",
+                    choices=("prism", "voltage"))
+    ap.add_argument("--cr", type=float, default=16.0)
+    ap.add_argument("--json", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else (args.arch,)
+    shapes = tuple(SHAPES) if args.shape == "all" else (args.shape,)
+    failures = []
+    for a in archs:
+        for s in shapes:
+            try:
+                rec = run_one(a, s, multipod=args.multipod, mode=args.mode,
+                              cr=args.cr)
+                if args.json:
+                    with open(args.json, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures.append((a, s, repr(e)[:500]))
+                print(f"== {a} × {s} FAILED: {e!r}"[:600])
+    if failures:
+        print(f"{len(failures)} FAILURES")
+        sys.exit(1)
+    print("DRY-RUN OK")
+
+
+if __name__ == "__main__":
+    main()

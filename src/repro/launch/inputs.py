@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation.  The dry-run lowers against these.
+
+``[audio]``/``[vlm]`` carve-out: the modality frontend is a stub —
+``input_specs`` provides precomputed frame/patch embeddings of the right
+shape, and the framework implements the transformer that consumes them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import SHAPES, InputShape
+from ..models.config import ModelConfig
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape,
+                      dtype=jnp.bfloat16):
+    b, n = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "encodec_stub":          # audio: frame embeddings
+        return {"embeds": sds((b, n, cfg.d_model), dtype),
+                "labels": sds((b, n), jnp.int32)}
+    batch = {"tokens": sds((b, n), jnp.int32),
+             "labels": sds((b, n), jnp.int32)}
+    if cfg.arch_type == "vlm":                  # image-patch prefix
+        batch["embeds"] = sds((b, cfg.prefix_len, cfg.d_model), dtype)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape,
+                        dtype=jnp.bfloat16):
+    b, n = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "encodec_stub":
+        return {"embeds": sds((b, n, cfg.d_model), dtype)}
+    batch = {"tokens": sds((b, n), jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["embeds"] = sds((b, cfg.prefix_len, cfg.d_model), dtype)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape):
+    """(token, pos) — the cache SDS tree comes from serve.cache_shapes."""
+    b = shape.global_batch
+    return (jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """eval_shape of init — the parameter SDS tree, no allocation."""
+    from ..models import transformer as T
+    return jax.eval_shape(
+        lambda: T.init(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def count_params(shapes_tree) -> int:
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes_tree)))
+
+
+def active_param_fraction(cfg: ModelConfig, shapes_tree) -> float:
+    """MoE: fraction of parameters active per token (top_k/n_experts on
+    expert weights; 1.0 elsewhere) — for MODEL_FLOPS = 6·N_active·D."""
+    import numpy as np
+    if not cfg.n_experts:
+        return 1.0
+    total = exp_total = 0
+    flat = jax.tree_util.tree_flatten_with_path(shapes_tree)[0]
+    for path, leaf in flat:
+        sz = int(np.prod(leaf.shape))
+        total += sz
+        if any(getattr(k, "key", None) == "experts" for k in path):
+            exp_total += sz
+    frac = cfg.top_k / cfg.n_experts
+    return (total - exp_total * (1 - frac)) / total

@@ -1,0 +1,45 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model").
+
+The ``model`` axis carries PRISM's P: activations (and KV caches) are
+sharded over it on the sequence dimension, and the per-block Segment-Means
+exchange is an all-gather over it.  ``data`` carries batch + FSDP.  ``pod``
+is pure data parallelism — PRISM's sequence exchange never crosses the
+(slow) pod boundary, matching the paper's premise.
+
+Functions, not module constants: importing this module must not touch jax
+device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as _np
+    n = int(_np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    # host-device stand-ins may exceed the mesh size (512 forced for the
+    # dry-run; the single-pod mesh takes the first 256)
+    assert len(devs) >= n, (len(devs), n)
+    return jax.sharding.Mesh(_np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model: int = 4, data: int = 2):
+    """Small mesh over host CPU devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes the global batch is sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

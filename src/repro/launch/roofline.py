@@ -1,0 +1,145 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+TPU v5e constants (target hardware — this container only compiles):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The three terms (per device, seconds):
+    compute    = HLO_FLOPs / peak_flops
+    memory     = HLO_bytes_accessed / hbm_bw
+    collective = per-device collective link-bytes / ici_bw
+
+``collective_bytes`` is parsed from the compiled HLO text: for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op we take the result shard shape and the replica-group size G and apply
+the standard ring-algorithm byte counts:
+
+    all-gather          result_bytes · (G-1)/G        (received)
+    reduce-scatter      result_bytes · (G-1)           (operand streamed)
+    all-reduce          2 · operand_bytes · (G-1)/G    (RS + AG phases)
+    all-to-all          result_bytes · (G-1)/G
+    collective-permute  result_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes / s
+ICI_BW = 50e9              # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUP_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device link bytes by collective kind, parsed from HLO."""
+    out = dict.fromkeys(_KINDS, 0)
+    counts = dict.fromkeys(_KINDS, 0)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done(" in line:
+            continue
+        shapes = _TUPLE_SHAPE_RE.findall(m.group(1))
+        if not shapes:
+            continue
+        bytes_ = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        g = 1
+        gm = _GROUP_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gm2 = _GROUP_V2_RE.search(line)
+            if gm2:
+                g = int(gm2.group(2))
+        if kind == "all-gather":
+            out[kind] += int(bytes_ * (g - 1) / max(g, 1))
+        elif kind == "reduce-scatter":
+            out[kind] += int(bytes_ * (g - 1))
+        elif kind == "all-reduce":
+            out[kind] += int(2 * bytes_ * (g - 1) / max(g, 1))
+        elif kind == "all-to-all":
+            out[kind] += int(bytes_ * (g - 1) / max(g, 1))
+        else:
+            out[kind] += int(bytes_)
+        counts[kind] += 1
+    total = sum(out.values())
+    return dict(out, ops=counts, total=total)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    mode: str
+    flops: float               # per device
+    bytes_accessed: float      # per device
+    coll_bytes: float          # per device
+    model_flops: float         # 6·N_active·D global (train) / 2·N·D (infer)
+    chips: int
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_frac(self):
+        tot = self.flops * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    def row(self):
+        return dict(asdict(self),
+                    t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective,
+                    bottleneck=self.bottleneck,
+                    useful=self.useful_flops_frac)
+
+
+def model_flops(kind: str, n_active_params: int, tokens: int) -> float:
+    """6·N·D for training (fwd+bwd), 2·N·D for inference."""
+    return (6.0 if kind == "train" else 2.0) * n_active_params * tokens

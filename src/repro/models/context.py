@@ -1,0 +1,212 @@
+"""SeqContext — how a model's sequence-mixing layers see the sequence.
+
+One model implementation serves three execution styles:
+
+  * ``FullContext``      — whole sequence on one executor (smoke tests,
+                           single-device baseline, the paper's "No partition").
+  * ``SimulatedContext`` — the paper's P-device protocol simulated on one
+                           chip: partitions stacked into the batch axis,
+                           Segment-Means exchange materialized exactly as the
+                           per-device math (modes prism/voltage/duplicate).
+                           Used for accuracy experiments and as the oracle
+                           for the sharded path.
+  * ``ShardedPrismContext`` (repro.sharding.context) — the production path:
+                           the same math under ``shard_map`` where the
+                           exchange is a ``lax.all_gather`` of segment means
+                           over the ``model`` mesh axis.
+
+The context contract for attention layers:
+
+    xq, akv = ctx.augment(x, spec)     # query source + augmented K/V view
+    ... attention(xq ..., akv.x_hat ..., akv.g, akv.mask) ...
+    out = ctx.finalize(out)            # back to the caller's layout
+
+and for linear-recurrence (SSM) layers:
+
+    prefix = ctx.state_handoff(summaries)   # cross-chunk/device prefix states
+    gathered = ctx.gather_sequence(x)       # escape hatch (sLSTM; voltage)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.segment_means import segment_means, segment_sizes, segment_bounds
+from ..core.masks import visibility, visibility_np
+from ..core.protocol import PrismConfig
+from .layers import AttnSpec
+
+
+@dataclass(frozen=True)
+class AugmentedKV:
+    x_hat: jnp.ndarray                 # (B', M, D) K/V source
+    g: Optional[jnp.ndarray]           # broadcastable to (B',1,Nq,M) or None
+    mask: Optional[jnp.ndarray]        # bool, (Nq,M) or (B',1,Nq,M)
+    row_pos: jnp.ndarray               # (Nq,) or (B',Nq) — for q RoPE
+    col_pos: jnp.ndarray               # (M,)  or (B',M)  — for k RoPE
+
+
+class SeqContext:
+    def augment(self, x, spec: AttnSpec):
+        raise NotImplementedError
+
+    def finalize(self, out):
+        return out
+
+    # ---- linear-recurrence (SSM) cross-device handoff -------------------
+    def state_handoff(self, log_a_tot, u_tot):
+        """Initial state entering this executor's chunk for a linear
+        recurrence ``S' = a·S + u``.  ``log_a_tot (B,H)`` / ``u_tot
+        (B,H,dk,dv)`` summarize the local chunk.  Single-executor contexts
+        own the whole sequence, so the incoming state is zero; the sharded
+        context computes an exclusive prefix over the ``model`` axis."""
+        return jnp.zeros_like(u_tot)
+
+    # ---- sequence escape hatches ----------------------------------------
+    def gather_sequence(self, x):
+        """Full sequence view (sLSTM; inherently sequential layers)."""
+        return x
+
+    def take_local(self, y_full):
+        """Inverse of gather_sequence: slice this executor's span."""
+        return y_full
+
+    def prev_tail(self, x, size: int):
+        """Last ``size`` positions of the *preceding* chunk (causal-conv /
+        sliding-window halo).  Zeros at the true sequence start."""
+        return jnp.zeros(x.shape[:-2] + (size,) + x.shape[-1:], x.dtype)
+
+    def last_shard(self, x):
+        """Value held by the executor owning the END of the sequence,
+        broadcast to all (decode-cache capture).  Identity when one
+        executor owns the whole sequence."""
+        return x
+
+    # ---- MoE expert exchange ---------------------------------------------
+    def expert_exchange(self, buf):
+        """(E, cap, D) -> (E_local, S, D) plus the inverse for the outputs.
+        Identity when experts are local."""
+        return buf, lambda y: y
+
+    def expert_reduce(self, y):
+        """Sum expert-TP down-projection partials (identity unless the
+        per-expert d_ff dim is sharded — decode expert-TP)."""
+        return y
+
+    def ffn_reduce(self, y):
+        """Sum Megatron-TP FFN partials (identity unless the dense FFN is
+        column/row-split over 'model' — decode TP; used for the MoE
+        dense-residual branch)."""
+        return y
+
+
+# --------------------------------------------------------------------------
+
+
+class FullContext(SeqContext):
+    """Whole sequence visible; standard masks; no compression."""
+
+    def __init__(self, *, start: int = 0, prefix_len: int = 0):
+        self.start = start
+        self.prefix_len = prefix_len
+
+    def augment(self, x, spec: AttnSpec):
+        n = x.shape[-2]
+        pos = jnp.arange(n) + self.start
+        mask = visibility(pos, pos, pos, causal=spec.causal,
+                          prefix_len=self.prefix_len, window=spec.window)
+        return x, AugmentedKV(x, None, mask, pos, pos)
+
+
+class SimulatedContext(SeqContext):
+    """Paper-faithful P-device simulation on one executor.
+
+    Requires N % P == 0 so partitions stack; the ragged general case is
+    covered by `repro.core.protocol.device_views` (used in tests/evals with
+    a python loop).  Partitions are folded into the batch axis:
+    x (B, N, D) -> xq (B*P, N/P, D).
+    """
+
+    def __init__(self, cfg: PrismConfig, *, prefix_len: int = 0):
+        self.cfg = cfg
+        self.prefix_len = prefix_len
+        self._b = None  # remembered for finalize
+
+    def augment(self, x, spec: AttnSpec):
+        cfg = self.cfg
+        b, n, d = x.shape
+        p = cfg.P
+        assert n % p == 0, "SimulatedContext needs N % P == 0"
+        npart = n // p
+        self._b = b
+        xp = x.reshape(b, p, npart, d)
+        xq = xp.reshape(b * p, npart, d)
+        row_pos = (np.arange(p)[:, None] * npart + np.arange(npart))  # (P, Np)
+
+        if cfg.mode == "voltage" or spec.window is not None:
+            # voltage: full exchange.  Sliding-window layers likewise use the
+            # exact window (PRISM means are out-of-window by construction).
+            x_hat = jnp.broadcast_to(x[:, None], (b, p, n, d)).reshape(b * p, n, d)
+            col = np.arange(n)
+            masks = np.stack([
+                visibility_np(rp, col, col, causal=spec.causal,
+                              prefix_len=self.prefix_len,
+                              window=spec.window)
+                for rp in row_pos])
+            mask = jnp.asarray(np.tile(masks, (b, 1, 1)))[:, None]
+            akv = AugmentedKV(
+                x_hat, None, mask,
+                jnp.asarray(np.tile(row_pos, (b, 1))),
+                jnp.broadcast_to(jnp.asarray(col), (b * p, n)))
+            return xq, akv
+
+        L = cfg.landmarks(n)
+        z = segment_means(xp, L)                       # (B, P, L, D)
+        sizes = segment_sizes(npart, L)                # same for all partitions
+        mids, los, his = [], [], []
+        for q in range(p):
+            lo, hi = segment_bounds(npart, L, offset=q * npart)
+            los.append(lo); his.append(hi)
+            mids.append((lo + hi) / 2.0)
+
+        x_hats, gs, masks, col_poss = [], [], [], []
+        for pi in range(p):
+            others = [q for q in range(p) if q != pi]
+            remote = jnp.concatenate([z[:, q] for q in others], axis=-2)
+            x_hats.append(jnp.concatenate([xp[:, pi], remote], axis=-2))
+            if cfg.mode == "prism_nodup":          # Table II 'No' column
+                g = np.ones(npart + len(others) * L)
+            else:
+                g = np.concatenate([np.ones(npart)]
+                                   + [sizes for _ in others])
+            gs.append(g)
+            c_lo = np.concatenate([np.arange(npart) + pi * npart]
+                                  + [los[q] for q in others])
+            c_hi = np.concatenate([np.arange(npart) + pi * npart]
+                                  + [his[q] for q in others])
+            col_poss.append(np.concatenate(
+                [np.arange(npart) + pi * npart] + [mids[q] for q in others]))
+            masks.append(visibility_np(
+                row_pos[pi], c_lo, c_hi,
+                causal=spec.causal, prefix_len=self.prefix_len, window=None))
+
+        x_hat = jnp.stack(x_hats, axis=1)              # (B, P, M, D)
+        m = x_hat.shape[-2]
+        x_hat = x_hat.reshape(b * p, m, d)
+        g = jnp.asarray(np.tile(np.stack(gs), (b, 1)))[:, None, None, :]
+        mask = jnp.asarray(np.tile(np.stack(masks), (b, 1, 1)))[:, None]
+        akv = AugmentedKV(
+            x_hat, g, mask,
+            jnp.asarray(np.tile(row_pos, (b, 1))),
+            jnp.asarray(np.tile(np.stack(col_poss), (b, 1))))
+        return xq, akv
+
+    def finalize(self, out):
+        bp, npart, d = out.shape
+        b = self._b
+        return out.reshape(b, bp // b, npart, d).reshape(b, npart * bp // b, d)
+

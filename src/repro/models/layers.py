@@ -1,0 +1,171 @@
+"""Pure-JAX neural layers: params are plain pytrees (nested dicts), every
+layer is an ``init(key, ...) -> params`` / ``apply(params, x, ...)`` pair.
+
+No flax/haiku — the framework owns its module system so that sharding
+rules can address parameters by path (see ``repro.sharding.rules``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.float32):
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * (d ** -0.5)).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm(p, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, *, theta: float = 10000.0):
+    """Rotary position embedding.  x (..., n, H, hd), pos (n,) or (..., n).
+
+    For PRISM segment-mean columns the caller passes the segment *midpoint*
+    as the column position (hardware-adaptation note in DESIGN.md §2: the
+    paper's GPT-2 uses learned absolute embeddings which average into the
+    means for free; RoPE models need a representative rotation per mean).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = pos.astype(jnp.float32)[..., :, None] * freq        # (..., n, half)
+    angle = angle[..., :, None, :]                              # (..., n, 1, half)
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP variants
+# --------------------------------------------------------------------------
+
+MLP_KINDS = ("gelu", "geglu", "swiglu", "relu")
+
+
+def mlp_init(key, d: int, d_ff: int, kind: str, *, bias: bool = False,
+             dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = kind in ("geglu", "swiglu")
+    p = {"up": dense_init(k1, d, d_ff, bias=bias, dtype=dtype),
+         "down": dense_init(k2, d_ff, d, bias=bias, dtype=dtype)}
+    if gated:
+        p["gate"] = dense_init(k3, d, d_ff, bias=bias, dtype=dtype)
+    return p
+
+
+def mlp(p, x, kind: str):
+    if kind == "gelu":
+        return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+    if kind == "relu":
+        return dense(p["down"], jax.nn.relu(dense(p["up"], x)))
+    up = dense(p["up"], x)
+    gate = dense(p["gate"], x)
+    act = jax.nn.gelu(gate, approximate=True) if kind == "geglu" else jax.nn.silu(gate)
+    return dense(p["down"], act * up)
+
+
+# --------------------------------------------------------------------------
+# attention layer (PRISM-aware through the SeqContext protocol)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    bias: bool = False
+    rope_theta: float | None = 10000.0   # None => no rotary (learned/abs pos)
+    qk_norm: bool = False
+    logit_softcap: float | None = None
+    window: int | None = None            # sliding-window layer (gemma3 local)
+    causal: bool = True
+
+
+def attn_init(key, s: AttnSpec, dtype=jnp.float32):
+    kq, kk, kv, ko, kn1, kn2 = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(kq, s.d_model, s.n_heads * s.head_dim, bias=s.bias, dtype=dtype),
+        "wk": dense_init(kk, s.d_model, s.n_kv_heads * s.head_dim, bias=s.bias, dtype=dtype),
+        "wv": dense_init(kv, s.d_model, s.n_kv_heads * s.head_dim, bias=s.bias, dtype=dtype),
+        "wo": dense_init(ko, s.n_heads * s.head_dim, s.d_model, bias=s.bias, dtype=dtype),
+    }
+    if s.qk_norm:
+        p["qnorm"] = norm_init(s.head_dim, "rmsnorm", dtype)
+        p["knorm"] = norm_init(s.head_dim, "rmsnorm", dtype)
+    return p
+
+
+def attn_project_q(p, s: AttnSpec, x, row_pos):
+    b, n, _ = x.shape
+    q = dense(p["wq"], x).reshape(b, n, s.n_heads, s.head_dim)
+    if s.qk_norm:
+        q = norm(p["qnorm"], q)
+    if s.rope_theta is not None:
+        q = rope(q, row_pos, theta=s.rope_theta)
+    return q
+
+
+def attn_project_kv(p, s: AttnSpec, x_hat, col_pos):
+    b, m, _ = x_hat.shape
+    k = dense(p["wk"], x_hat).reshape(b, m, s.n_kv_heads, s.head_dim)
+    v = dense(p["wv"], x_hat).reshape(b, m, s.n_kv_heads, s.head_dim)
+    if s.qk_norm:
+        k = norm(p["knorm"], k)
+    if s.rope_theta is not None:
+        k = rope(k, col_pos, theta=s.rope_theta)
+    return k, v
+
+
+def attn_output(p, o):
+    b, n, h, hd = o.shape
+    return dense(p["wo"], o.reshape(b, n, h * hd))

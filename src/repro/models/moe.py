@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+The same dispatch runs everywhere; only the *exchange* differs:
+  * FullContext: experts are local — exchange is the identity.
+  * ShardedPrismContext: experts are sharded over the ``model`` mesh axis —
+    exchange is a pair of ``lax.all_to_all``s (dispatch and return), the
+    canonical expert-parallel pattern.
+
+Routing: softmax router, top-k, capacity ``C = ceil(T·k/E · capacity_factor)``
+per expert per device; overflow tokens are dropped (their combine weight
+contribution is zero — the residual path carries them).  The standard
+load-balance auxiliary loss is returned for training.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dense, mlp_init, mlp
+
+
+def moe_init(key, d: int, n_experts: int, d_ff: int, kind: str,
+             *, dense_d_ff: int = 0, dtype=jnp.float32):
+    kr, ke, kd = jax.random.split(key, 3)
+    ekeys = jax.random.split(ke, n_experts)
+    experts = jax.vmap(
+        lambda k: mlp_init(k, d, d_ff, kind, dtype=dtype))(ekeys)
+    p = {"router": dense_init(kr, d, n_experts, dtype=dtype),
+         "experts": experts}
+    if dense_d_ff:
+        p["dense_mlp"] = mlp_init(kd, d, dense_d_ff, kind, dtype=dtype)
+    return p
+
+
+def route(router_p, x_flat, top_k: int, n_experts: int):
+    """Returns (probs (T,k), idx (T,k), aux_loss scalar)."""
+    logits = dense(router_p, x_flat).astype(jnp.float32)    # (T, E)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    probs, idx = jax.lax.top_k(probs_full, top_k)
+    # load-balance loss (Switch-style): E * sum_e f_e * P_e
+    t = x_flat.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / (t * top_k)
+    p_mean = probs_full.mean(axis=0)
+    aux = n_experts * jnp.sum(f * p_mean)
+    return probs.astype(x_flat.dtype), idx, aux
+
+
+def capacity(t: int, top_k: int, n_experts: int, factor: float) -> int:
+    return max(1, math.ceil(t * top_k / n_experts * factor))
+
+
+def dispatch_indices(idx: jnp.ndarray, n_experts: int, cap: int):
+    """Sort-based slotting: token-assignment -> (expert, slot) coordinates.
+
+    idx: (T, k) expert ids.  Returns (expert (Tk,), slot (Tk,), keep (Tk,),
+    token (Tk,)) with slot < cap where keep.
+    """
+    t, k = idx.shape
+    flat_e = idx.reshape(-1)                       # (Tk,)
+    token = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+    rank_sorted = jnp.arange(t * k) - first[sorted_e]
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+    return flat_e, rank, keep, token
+
+
+def moe_apply(p, x, cfg, ctx):
+    """x: (B, N, D) -> (y, aux_loss).  cfg is a ModelConfig."""
+    b, n, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    x_flat = x.reshape(b * n, d)
+    t = b * n
+    probs, idx, aux = route(p["router"], x_flat, k, e)
+    cap = capacity(t, k, e, cfg.capacity_factor)
+
+    flat_e, slot, keep, token = dispatch_indices(idx, e, cap)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    src = jnp.where(keep[:, None], x_flat[token], 0.0)
+    buf = buf.at[flat_e, slot].add(src)            # dropped tokens add 0
+
+    # exchange -> (E_local, S, D), S = cap * n_model_shards.  Under
+    # shard_map the expert params are already the local (E_local, ...)
+    # shard, so the vmap below lines up in both contexts.
+    buf_local, undo = ctx.expert_exchange(buf)
+
+    def one_expert(ep, xe):
+        return mlp(ep, xe, cfg.mlp_kind)
+    y_local = jax.vmap(one_expert)(p["experts"], buf_local)
+    y_local = ctx.expert_reduce(y_local)           # expert-TP partials
+
+    y_buf = undo(y_local)                          # (E, cap, D)
+
+    w = jnp.where(keep, probs.reshape(-1), 0.0)
+    y_tok = y_buf[flat_e, slot] * w[:, None].astype(x.dtype)
+    y_flat = jnp.zeros_like(x_flat).at[token].add(y_tok)
+    y = y_flat.reshape(b, n, d)
+
+    if "dense_mlp" in p:                           # arctic dense residual
+        y = y + ctx.ffn_reduce(mlp(p["dense_mlp"], x, cfg.mlp_kind))
+    return y, aux

@@ -1,0 +1,348 @@
+"""SSM / recurrent sequence mixers: mLSTM, sLSTM (xLSTM [arXiv:2405.04517])
+and Mamba2 / SSD (zamba2 [arXiv:2411.15242]).
+
+All linear recurrences share one chunkwise algorithm
+(``chunked_linear_attention``): within a chunk the recurrence
+
+    S_t = f_t · S_{t-1} + i_t · k_t v_tᵀ ,   y_t = q_t · S_t
+
+is evaluated as decay-masked attention (q kᵀ ⊙ Γ) v — O(c²) per chunk —
+while chunk-to-chunk state flows through a tiny (dk×dv) summary.  Under
+sequence partitioning the *device-to-device* state handoff goes through
+``ctx.state_handoff`` — a constant-size exchange, which is the PRISM
+adaptation for recurrent blocks (DESIGN.md §6): the state *is* the
+summary, no Segment Means needed.
+
+sLSTM's recurrence passes through a nonlinearity, so it cannot be
+chunk-parallelized; the sharded path gathers the full (pre-activation)
+sequence and scans locally (DESIGN.md §6 records this as
+PRISM-inapplicable).
+
+Numerics note (recorded in DESIGN.md): input/forget gates use
+sigmoid (log-sigmoid decays), not xLSTM's exponential-gating stabilizer —
+the chunked math is identical, the gate range is narrower.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dense, norm_init, norm
+
+
+# --------------------------------------------------------------------------
+# shared chunkwise linear recurrence
+# --------------------------------------------------------------------------
+
+def chunked_linear_attention(q, k, v, log_f, gate_i, *, chunk: int, ctx,
+                             normalize: bool = False,
+                             return_state: bool = False):
+    """q,k: (B,N,H,dk)  v: (B,N,H,dv)  log_f, gate_i: (B,N,H), log_f <= 0.
+
+    Returns y (B,N,H,dv).  With ``normalize`` a ones-column is appended to v
+    (the mLSTM normalizer n_t) and the output is divided by max(|q·n|, 1).
+
+    ``return_state``: additionally return the recurrence state *after the
+    final token of the global sequence* (B,H,dk,dv[+1]) — the decode cache.
+    Under sharding each executor computes its local end-state and the
+    context's ``last_shard`` broadcasts the final shard's value.
+    """
+    b, n, h, dk = q.shape
+    dv = v.shape[-1]
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+        dv += 1
+    chunk = min(chunk, n)
+    assert n % chunk == 0, f"N={n} not divisible by chunk={chunk}"
+    nc = n // chunk
+
+    def r(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:])
+
+    qc, kc, vc = r(q), r(k), r(v)
+    lf, gi = r(log_f), r(gate_i)
+
+    a = jnp.cumsum(lf, axis=2)                       # (B,nc,c,H) inclusive
+    # intra-chunk: w_{tτ} = exp(a_t - a_τ) · i_τ for τ <= t
+    diff = a[:, :, :, None, :] - a[:, :, None, :, :]             # (B,nc,c,c,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    w = w * gi[:, :, None, :, :]
+    scores = jnp.einsum("bnthd,bnshd->bntsh", qc, kc)
+    y = jnp.einsum("bntsh,bntsh,bnshv->bnthv",
+                   scores, w.astype(scores.dtype), vc)
+
+    # chunk summaries: logA_j = a_end; U_j = Σ exp(a_end - a_τ) i_τ k_τ v_τᵀ
+    # (state path in f32: the associative scan mixes exp(f32 decays) into
+    # the state, and bf16 accumulation both loses precision and trips
+    # lax.concatenate dtype checks inside associative_scan)
+    a_end = a[:, :, -1]                                          # (B,nc,H)
+    wu = jnp.exp(a_end[:, :, None] - a) * gi                     # (B,nc,c,H)
+    u = jnp.einsum("bnsh,bnshd,bnshv->bnhdv", wu.astype(kc.dtype), kc, vc
+                   ).astype(jnp.float32)
+
+    # local prefix over chunks (exclusive): S_in_j
+    def combine(x1, x2):
+        la1, u1 = x1
+        la2, u2 = x2
+        return la1 + la2, jnp.exp(la2)[..., None, None] * u1 + u2
+    la_s, u_s = jax.lax.associative_scan(combine, (a_end, u), axis=1)
+    s_in = jnp.concatenate(
+        [jnp.zeros_like(u_s[:, :1]), u_s[:, :-1]], axis=1)       # (B,nc,H,dk,dv)
+    la_in = jnp.concatenate(
+        [jnp.zeros_like(la_s[:, :1]), la_s[:, :-1]], axis=1)
+
+    # cross-device prefix: summarize the whole local span, ask the context
+    log_a_tot = la_s[:, -1]                                      # (B,H)
+    u_tot = u_s[:, -1]                                           # (B,H,dk,dv)
+    s0 = ctx.state_handoff(log_a_tot, u_tot)                     # (B,H,dk,dv)
+
+    # state entering chunk j (global) = exp(la_in_j)·s0 + s_in_j
+    s_glob = jnp.exp(la_in)[..., None, None] * s0.astype(jnp.float32)[:, None] \
+        + s_in
+    y = (y.astype(jnp.float32)
+         + jnp.einsum("bnth,bnthd,bnhdv->bnthv",
+                      jnp.exp(a), qc.astype(jnp.float32), s_glob)
+         ).astype(v.dtype)
+    y = y.reshape(b, n, h, dv)
+
+    if normalize:
+        y, nrm = y[..., :-1], y[..., -1:]
+        y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    if return_state:
+        s_end = jnp.exp(log_a_tot)[..., None, None] * s0 + u_tot  # (B,H,dk,dv)
+        return y, ctx.last_shard(s_end)
+    return y
+
+
+# --------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# --------------------------------------------------------------------------
+
+def mlstm_init(key, d: int, heads: int, expand: int, dtype=jnp.float32):
+    d_in = d * expand
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], d, 2 * d_in, dtype=dtype),
+        "wq": dense_init(ks[1], d_in, d_in, dtype=dtype),
+        "wk": dense_init(ks[2], d_in, d_in, dtype=dtype),
+        "wv": dense_init(ks[3], d_in, d_in, dtype=dtype),
+        "gates": dense_init(ks[4], d_in, 2 * heads, bias=True, dtype=dtype),
+        "hnorm": norm_init(d_in // heads, "rmsnorm", dtype),
+        "down": dense_init(ks[5], d_in, d, dtype=dtype),
+    }
+
+
+def mlstm_apply(p, x, *, heads: int, ctx, chunk: int = 128,
+                return_state: bool = False):
+    b, n, d = x.shape
+    xz = dense(p["up"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    d_in = x_in.shape[-1]
+    hd = d_in // heads
+
+    def split_heads(t):
+        return t.reshape(b, n, heads, hd)
+    q = split_heads(dense(p["wq"], x_in)) * (hd ** -0.5)
+    k = split_heads(dense(p["wk"], x_in))
+    v = split_heads(dense(p["wv"], x_in))
+    gp = dense(p["gates"], x_in).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gp, 2, axis=-1)                     # (B,N,H)
+    log_f = jax.nn.log_sigmoid(f_pre + 1.0)   # forget bias -> long memory
+    gate_i = jax.nn.sigmoid(i_pre)
+
+    h = chunked_linear_attention(q, k, v, log_f, gate_i,
+                                 chunk=chunk, ctx=ctx, normalize=True,
+                                 return_state=return_state)
+    if return_state:
+        h, state = h
+    h = norm(p["hnorm"], h)
+    h = h.reshape(b, n, d_in) * jax.nn.silu(z)
+    y = dense(p["down"], h)
+    return (y, state) if return_state else y
+
+
+def mlstm_decode(p, x, state, *, heads: int):
+    """One-token decode: x (B,1,D), state (B,H,dk,dv+1) -> (y, state')."""
+    b, _, d = x.shape
+    xz = dense(p["up"], x[:, 0])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    d_in = x_in.shape[-1]
+    hd = d_in // heads
+
+    def heads_of(t):
+        return t.reshape(b, heads, hd)
+    q = heads_of(dense(p["wq"], x_in)) * (hd ** -0.5)
+    k = heads_of(dense(p["wk"], x_in))
+    v = heads_of(dense(p["wv"], x_in))
+    gp = dense(p["gates"], x_in).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gp, 2, axis=-1)                     # (B,H)
+    f = jax.nn.sigmoid(f_pre + 1.0)
+    i = jax.nn.sigmoid(i_pre)
+    v1 = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    kv = jnp.einsum("bhd,bhv->bhdv", k, v1) * i[..., None, None]
+    state = f[..., None, None].astype(state.dtype) * state + kv
+    y = jnp.einsum("bhd,bhdv->bhv", q, state.astype(q.dtype))
+    y, nrm = y[..., :-1], y[..., -1:]
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)
+    h = norm(p["hnorm"], y)
+    h = h.reshape(b, d_in) * jax.nn.silu(z)
+    return dense(p["down"], h)[:, None], state
+
+
+# --------------------------------------------------------------------------
+# sLSTM block (xLSTM) — sequential; PRISM-inapplicable (DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+def slstm_init(key, d: int, heads: int, dtype=jnp.float32):
+    hd = d // heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, bias=True, dtype=dtype),
+        # block-diagonal recurrent weights, one (hd, hd) block per head/gate
+        "r": (jax.random.normal(ks[1], (4, heads, hd, hd)) * (hd ** -0.5)
+              ).astype(dtype),
+        "hnorm": norm_init(d, "rmsnorm", dtype),
+        "down": dense_init(ks[2], d, d, dtype=dtype),
+    }
+
+
+def _slstm_step(r, carry, gates_t):
+    c, nrm, h = carry
+    rec = jnp.einsum("ghij,bhj->bghi", r, h)         # (B,4,H,hd)
+    zt, it, ft, ot = [gates_t[:, i] + rec[:, i] for i in range(4)]
+    zt = jnp.tanh(zt)
+    it = jax.nn.sigmoid(it)
+    ft = jax.nn.sigmoid(ft + 1.0)
+    ot = jax.nn.sigmoid(ot)
+    c = ft * c + it * zt
+    nrm = ft * nrm + it
+    h = ot * c / jnp.maximum(jnp.abs(nrm), 1.0)
+    return (c, nrm, h), h
+
+
+def slstm_apply(p, x, *, heads: int, ctx, return_state: bool = False):
+    b, n, d = x.shape
+    hd = d // heads
+    x_full = ctx.gather_sequence(x)                  # (B, N_full, D)
+    nf = x_full.shape[1]
+    pre = dense(p["wx"], x_full).reshape(b, nf, 4, heads, hd)
+    r = p["r"].astype(jnp.float32)
+
+    z0 = jnp.zeros((b, heads, hd), jnp.float32)
+    carry, hs = jax.lax.scan(
+        lambda c, g: _slstm_step(r, c, g),
+        (z0, z0, z0), jnp.moveaxis(pre.astype(jnp.float32), 1, 0))
+    h_full = jnp.moveaxis(hs, 0, 1).reshape(b, nf, d).astype(x.dtype)
+    h = ctx.take_local(h_full)
+    h = norm(p["hnorm"], h)
+    y = dense(p["down"], h)
+    if return_state:
+        return y, jnp.stack(carry, axis=1)           # (B, 3, H, hd)
+    return y
+
+
+def slstm_decode(p, x, state, *, heads: int):
+    """x (B,1,D), state (B,3,H,hd) f32 -> (y, state')."""
+    b, _, d = x.shape
+    hd = d // heads
+    pre = dense(p["wx"], x[:, 0]).reshape(b, 4, heads, hd).astype(jnp.float32)
+    r = p["r"].astype(jnp.float32)
+    carry = tuple(state[:, i] for i in range(3))
+    carry, h = _slstm_step(r, carry, pre)
+    h = norm(p["hnorm"], h.reshape(b, d).astype(x.dtype))
+    return dense(p["down"], h)[:, None], jnp.stack(carry, axis=1)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 / SSD block (zamba2)
+# --------------------------------------------------------------------------
+
+def mamba2_init(key, d: int, heads: int, d_state: int, expand: int,
+                conv: int, dtype=jnp.float32):
+    d_in = d * expand
+    ks = jax.random.split(key, 5)
+    return {
+        # fused in-proj: [z (d_in), x (d_in), B (d_state), C (d_state), dt (H)]
+        "in": dense_init(ks[0], d, 2 * d_in + 2 * d_state + heads, dtype=dtype),
+        "conv": (jax.random.normal(ks[1], (conv, d_in)) * (conv ** -0.5)
+                 ).astype(dtype),
+        "a_log": jnp.zeros((heads,), jnp.float32),   # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), dtype),
+        "ynorm": norm_init(d_in, "rmsnorm", dtype),
+        "out": dense_init(ks[2], d_in, d, dtype=dtype),
+    }
+
+
+def _mamba_proj_split(p, x, d_in, d_state):
+    proj = dense(p["in"], x)
+    z = proj[..., :d_in]
+    xc = proj[..., d_in:2 * d_in]
+    bmat = proj[..., 2 * d_in:2 * d_in + d_state]
+    cmat = proj[..., 2 * d_in + d_state:2 * d_in + 2 * d_state]
+    dt_pre = proj[..., 2 * d_in + 2 * d_state:]
+    return z, xc, bmat, cmat, dt_pre
+
+
+def mamba2_apply(p, x, *, heads: int, d_state: int, expand: int,
+                 conv: int, ctx, chunk: int = 128,
+                 return_state: bool = False):
+    b, n, d = x.shape
+    d_in = d * expand
+    hd = d_in // heads
+    z, xc, bmat, cmat, dt_pre = _mamba_proj_split(p, x, d_in, d_state)
+
+    # causal depthwise conv, halo from the previous shard via the context
+    tail = ctx.prev_tail(xc, conv - 1)
+    xc_pad = jnp.concatenate([tail, xc], axis=1)
+    conv_tail = (ctx.last_shard(xc_pad[:, -(conv - 1):])  # decode cache
+                 if return_state else None)
+    kern = p["conv"].astype(xc.dtype)
+    xc = sum(xc_pad[:, i:i + n] * kern[i] for i in range(conv))
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + p["dt_bias"])            # (B,N,H)
+    log_f = -dt * jnp.exp(p["a_log"])               # <= 0
+    v = xc.reshape(b, n, heads, hd)
+    k = jnp.repeat(bmat[:, :, None, :], heads, axis=2)   # shared B across heads
+    q = jnp.repeat(cmat[:, :, None, :], heads, axis=2)
+    y = chunked_linear_attention(q, k, v, log_f, dt,
+                                 chunk=chunk, ctx=ctx, normalize=False,
+                                 return_state=return_state)
+    if return_state:
+        y, state = y
+    y = y + v * p["d_skip"].astype(v.dtype)[None, None, :, None]
+    y = y.reshape(b, n, d_in) * jax.nn.silu(z)
+    y = norm(p["ynorm"], y)
+    out = dense(p["out"], y)
+    return (out, {"s": state, "tail": conv_tail}) if return_state else out
+
+
+def mamba2_decode(p, x, cache, *, heads: int, d_state: int, expand: int,
+                  conv: int):
+    """x (B,1,D), cache {'s': (B,H,dk,dv) f32, 'tail': (B,conv-1,d_in)}."""
+    b, _, d = x.shape
+    d_in = d * expand
+    hd = d_in // heads
+    z, xc, bmat, cmat, dt_pre = _mamba_proj_split(p, x[:, 0], d_in, d_state)
+
+    window = jnp.concatenate([cache["tail"], xc[:, None]], axis=1)  # (B,conv,d_in)
+    kern = p["conv"].astype(xc.dtype)
+    xc = jnp.einsum("bcd,cd->bd", window, kern)
+    xc = jax.nn.silu(xc)
+    new_tail = window[:, 1:]
+
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    f = jnp.exp(-dt * jnp.exp(p["a_log"]))
+    v = xc.reshape(b, heads, hd)
+    k = bmat                                           # (B, d_state), shared
+    q = cmat
+    kv = jnp.einsum("bd,bhv->bhdv", k, v) * dt[..., None, None].astype(v.dtype)
+    s = f[..., None, None].astype(cache["s"].dtype) * cache["s"] + kv
+    y = jnp.einsum("bd,bhdv->bhv", q, s.astype(q.dtype))
+    y = y + v * p["d_skip"].astype(v.dtype)[None, :, None]
+    y = y.reshape(b, d_in) * jax.nn.silu(z)
+    y = norm(p["ynorm"], y)
+    return dense(p["out"], y)[:, None], {"s": s, "tail": new_tail}

@@ -1,0 +1,275 @@
+"""Composable Transformer stack covering every assigned architecture family.
+
+``init(cfg, key)`` builds a parameter pytree; ``forward(cfg, params, ...)``
+runs it under any ``SeqContext`` (single-device, simulated-P, or sharded).
+Heterogeneous per-layer block kinds (attn / attn_local / moe / mlstm /
+slstm / mamba / shared_attn) come from ``cfg.block_kinds``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .context import SeqContext, FullContext
+from .layers import (AttnSpec, attn_init, attn_project_q, attn_project_kv,
+                     attn_output, dense_init, dense, embedding_init, embed,
+                     mlp_init, mlp, norm_init, norm)
+from .moe import moe_init, moe_apply
+from .ssm import (mlstm_init, mlstm_apply, slstm_init, slstm_apply,
+                  mamba2_init, mamba2_apply)
+from ..core.attention import prism_attention
+
+
+# --------------------------------------------------------------------------
+# per-layer specs
+# --------------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig, kind: str) -> AttnSpec:
+    local = kind == "attn_local"
+    theta = None
+    if cfg.pos == "rope":
+        theta = cfg.rope_theta_local if local else cfg.rope_theta
+    return AttnSpec(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, bias=cfg.attn_bias, rope_theta=theta,
+        qk_norm=cfg.qk_norm, logit_softcap=cfg.logit_softcap,
+        window=cfg.window if local else None, causal=cfg.causal,
+    )
+
+
+def block_init(cfg: ModelConfig, kind: str, key, dtype):
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "attn_local"):
+        p = {"ln1": norm_init(cfg.d_model, cfg.norm_kind, dtype),
+             "attn": attn_init(ks[0], attn_spec(cfg, kind), dtype)}
+        if cfg.d_ff:
+            if not cfg.parallel_block:
+                p["ln2"] = norm_init(cfg.d_model, cfg.norm_kind, dtype)
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                                bias=cfg.attn_bias, dtype=dtype)
+        return p
+    if kind == "moe":
+        return {"ln1": norm_init(cfg.d_model, cfg.norm_kind, dtype),
+                "attn": attn_init(ks[0], attn_spec(cfg, kind), dtype),
+                "ln2": norm_init(cfg.d_model, cfg.norm_kind, dtype),
+                "moe": moe_init(ks[1], cfg.d_model, cfg.n_experts,
+                                cfg.expert_d_ff, cfg.mlp_kind,
+                                dense_d_ff=cfg.moe_dense_d_ff, dtype=dtype)}
+    if kind == "mlstm":
+        return {"ln": norm_init(cfg.d_model, cfg.norm_kind, dtype),
+                "cell": mlstm_init(ks[0], cfg.d_model, cfg.n_ssm_heads,
+                                   cfg.ssm_expand, dtype)}
+    if kind == "slstm":
+        return {"ln": norm_init(cfg.d_model, cfg.norm_kind, dtype),
+                "cell": slstm_init(ks[0], cfg.d_model, cfg.n_ssm_heads, dtype)}
+    if kind == "mamba":
+        return {"ln": norm_init(cfg.d_model, cfg.norm_kind, dtype),
+                "cell": mamba2_init(ks[0], cfg.d_model, cfg.n_ssm_heads,
+                                    cfg.ssm_state, cfg.ssm_expand,
+                                    cfg.ssm_conv, dtype)}
+    if kind == "shared_attn":
+        return {}          # uses params["shared"] (zamba2 weight sharing)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def stack_layers(cfg: ModelConfig, layers: list) -> dict:
+    """Per-layer trees -> {'scan': [u stacked trees], 'tail': [...]} —
+    the storage layout for scan-over-layers (compile time ~ O(unit), not
+    O(depth); see ModelConfig.scan_split)."""
+    u, n_units, _ = cfg.scan_split
+    scan = []
+    for j in range(u):
+        group = [layers[i * u + j] for i in range(n_units)]
+        scan.append(jax.tree.map(lambda *xs: jnp.stack(xs), *group)
+                    if jax.tree.leaves(group[0]) else group[0])
+    return {"scan": scan, "tail": layers[n_units * u:]}
+
+
+def layer_slice(stack, i: int):
+    """i-th layer of a stacked tree (host-side oracle path)."""
+    return jax.tree.map(lambda t: t[i], stack)
+
+
+def iter_layers(cfg: ModelConfig, params):
+    """Yield (kind, layer_tree) in depth order from the stacked layout."""
+    u, n_units, n_tail = cfg.scan_split
+    kinds = cfg.block_kinds
+    for i in range(n_units):
+        for j in range(u):
+            stack = params["scan"][j]
+            yield kinds[j], (layer_slice(stack, i)
+                             if jax.tree.leaves(stack) else stack)
+    for t, tree in enumerate(params["tail"]):
+        yield kinds[n_units * u + t], tree
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.n_layers + 5)
+    layers = [block_init(cfg, kind, keys[i], dtype)
+              for i, kind in enumerate(cfg.block_kinds)]
+    params = {**stack_layers(cfg, layers),
+              "final_norm": norm_init(cfg.d_model, cfg.norm_kind, dtype)}
+    if cfg.vocab_size:
+        params["embed"] = embedding_init(keys[-1], cfg.vocab_size,
+                                         cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[-2], cfg.d_model,
+                                           cfg.vocab_size, dtype=dtype)
+    if cfg.pos == "learned":
+        params["pos_embed"] = embedding_init(keys[-3], cfg.max_seq,
+                                             cfg.d_model, dtype)
+    if "shared_attn" in cfg.block_kinds:
+        params["shared"] = {
+            "ln1": norm_init(cfg.d_model, cfg.norm_kind, dtype),
+            "attn": attn_init(keys[-4], attn_spec(cfg, "attn"), dtype),
+            "ln2": norm_init(cfg.d_model, cfg.norm_kind, dtype),
+            "mlp": mlp_init(keys[-5], cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                            dtype=dtype)}
+    if cfg.num_classes:
+        params["head"] = dense_init(keys[-2], cfg.d_model, cfg.num_classes,
+                                    bias=True, dtype=dtype)
+    if cfg.frontend:
+        # stub modality projector (assignment carve-out): identity-sized
+        # linear from "frontend embedding" space into the backbone.
+        params["frontend_proj"] = dense_init(keys[-3], cfg.d_model,
+                                             cfg.d_model, dtype=dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# sublayers
+# --------------------------------------------------------------------------
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+def attn_sublayer(p, x, ctx: SeqContext, spec: AttnSpec, cfg: ModelConfig):
+    """PRISM-aware attention through the SeqContext protocol.
+
+    Segment means are exchanged on the *block input* (pre-norm residual
+    stream) — the quantity a real deployment transmits once per block —
+    and the receiving side applies its local LayerNorm to the augmented
+    matrix (LN of mean, matching a device that norms what it received)."""
+    xq, akv = ctx.augment(x, spec)
+    xq_n = norm(p["ln1"], xq, cfg.norm_kind)
+    xh_n = norm(p["ln1"], akv.x_hat, cfg.norm_kind)
+    q = attn_project_q(p["attn"], spec, xq_n, akv.row_pos)
+    k, v = attn_project_kv(p["attn"], spec, xh_n, akv.col_pos)
+    o = prism_attention(q, k, v, g=akv.g, mask=akv.mask,
+                        block=cfg.attn_block)
+    o = attn_output(p["attn"], o)
+    if cfg.parallel_block:
+        o = o + mlp(p["mlp"], xq_n, cfg.mlp_kind)
+    return ctx.finalize(o), xq_n
+
+
+def block_apply(cfg: ModelConfig, kind: str, p, shared, x, ctx: SeqContext,
+                chunk: int = 128):
+    """One residual block.  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_local", "moe"):
+        spec = attn_spec(cfg, kind)
+        o, _ = attn_sublayer(p, x, ctx, spec, cfg)
+        x = x + o
+        if cfg.parallel_block:
+            return x, aux     # mlp fused in the parallel branch
+        if kind == "moe":
+            y, aux = moe_apply(p["moe"], norm(p["ln2"], x, cfg.norm_kind),
+                               cfg, ctx)
+            x = x + y
+        elif cfg.d_ff:
+            x = x + mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_kind),
+                        cfg.mlp_kind)
+        return x, aux
+    if kind == "shared_attn":
+        spec = attn_spec(cfg, "attn")
+        o, _ = attn_sublayer(shared, x, ctx, spec, cfg)
+        x = x + o
+        x = x + mlp(shared["mlp"], norm(shared["ln2"], x, cfg.norm_kind),
+                    cfg.mlp_kind)
+        return x, aux
+    if kind == "mlstm":
+        x = x + mlstm_apply(p["cell"], norm(p["ln"], x, cfg.norm_kind),
+                            heads=cfg.n_ssm_heads, ctx=ctx, chunk=chunk)
+        return x, aux
+    if kind == "slstm":
+        x = x + slstm_apply(p["cell"], norm(p["ln"], x, cfg.norm_kind),
+                            heads=cfg.n_ssm_heads, ctx=ctx)
+        return x, aux
+    if kind == "mamba":
+        x = x + mamba2_apply(p["cell"], norm(p["ln"], x, cfg.norm_kind),
+                             heads=cfg.n_ssm_heads, d_state=cfg.ssm_state,
+                             expand=cfg.ssm_expand, conv=cfg.ssm_conv,
+                             ctx=ctx, chunk=chunk)
+        return x, aux
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# full forward
+# --------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params, tokens=None, embeds=None,
+                 pos_start=0):
+    """tokens (B, N) and/or stub-frontend embeds -> x (B, N, D).
+
+    VLM: embeds are the image-patch prefix — they OVERWRITE the first
+    ``prefix_len`` token positions (tokens there are placeholders), the
+    same convention the sharded runtime uses.  Audio: embeds are the
+    whole frame sequence (no tokens)."""
+    if tokens is not None:
+        x = embed(params["embed"], tokens)
+        if embeds is not None and cfg.arch_type == "vlm":
+            fe = dense(params["frontend_proj"], embeds)
+            x = jnp.concatenate([fe.astype(x.dtype),
+                                 x[:, cfg.prefix_len:]], axis=1)
+    else:
+        x = (dense(params["frontend_proj"], embeds) if cfg.frontend
+             else embeds)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    n = x.shape[1]
+    if cfg.pos == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"]["table"], pos_start, n).astype(x.dtype)
+    elif cfg.pos == "sincos":
+        x = x + sincos_embed(n, cfg.d_model, pos_start).astype(x.dtype)
+    return x
+
+
+def sincos_embed(n: int, d: int, start=0):
+    """Parameter-free sinusoidal positions (musicgen; long-context safe).
+    ``start`` may be a traced scalar (sharded path)."""
+    pos = (jnp.arange(n, dtype=jnp.float32)
+           + jnp.asarray(start, jnp.float32))[:, None]
+    half = d // 2
+    freq = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def forward(cfg: ModelConfig, params, tokens=None, *, embeds=None,
+            ctx: SeqContext | None = None, chunk: int = 128):
+    """Returns (logits_or_features, aux_losses)."""
+    ctx = ctx or FullContext(prefix_len=cfg.prefix_len)
+    x = embed_inputs(cfg, params, tokens, embeds)
+    aux_total = jnp.zeros((), jnp.float32)
+    shared = params.get("shared")
+    for kind, p in iter_layers(cfg, params):
+        x, aux = block_apply(cfg, kind, p, shared, x, ctx, chunk=chunk)
+        aux_total = aux_total + aux
+    x = norm(params["final_norm"], x, cfg.norm_kind)
+    aux = {"moe_aux": aux_total}
+    if cfg.num_classes:                    # encoder classification (ViT/BERT)
+        pooled = x[:, 0]                   # CLS token
+        return dense(params["head"], pooled), aux
+    if cfg.vocab_size:
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["table"].T.astype(x.dtype)
+        else:
+            logits = dense(params["lm_head"], x)
+        return _softcap(logits, cfg.logit_softcap), aux
+    return x, aux

@@ -1,0 +1,40 @@
+"""Losses.  The LM loss is *vocab-chunked*: for 256k-vocab architectures the
+full (B, N, V) logits tensor would dominate HBM (command-r train_4k:
+16×256×256000×4B ≈ 4 GB/device just for logits), so we scan over sequence
+chunks and never materialize more than (B, chunk, V)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels):
+    """(..., V) vs int labels (...,) -> mean nll."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def chunked_lm_loss(features, embed_table, labels, *, chunk: int = 256,
+                    softcap=None):
+    """features (B,N,D) @ tableᵀ (V,D) -> mean xent, scanning N in chunks."""
+    b, n, d = features.shape
+    chunk = min(chunk, n)
+    assert n % chunk == 0
+    nc = n // chunk
+    f = features.reshape(b, nc, chunk, d).swapaxes(0, 1)   # (nc,B,c,D)
+    y = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        fc, yc = xs
+        logits = fc @ embed_table.T.astype(fc.dtype)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), yc[..., None], axis=-1)[..., 0]
+        return carry + (lse - gold).sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (f, y))
+    return total / (b * n)

@@ -1,0 +1,876 @@
+"""Sharded serving runtime: prefill + single-token decode with a
+sequence-sharded KV cache.
+
+The paper evaluates PRISM teacher-forced (full sequences — our *prefill*
+path, where Segment-Means exchange replaces the Voltage all-gather).  For
+incremental decode we add the two modes a TPU deployment needs:
+
+  * ``exact``  — distributed flash-decoding: the cache is sharded over the
+    sequence axes; each shard attends to its local cache shard and the
+    partial softmax statistics (m, l, acc — O(B·H·hd), independent of N)
+    are combined with pmax/psum.  This is the hardware adaptation of the
+    paper's goal (never all-gather activations; per-device attention work
+    is N/P, not N) and is *exact*.
+  * ``prism``  — paper-faithful: each shard attends to its exact local
+    cache plus the cached Segment-Means K/V of all remote shards
+    (scaling-aware softmax); the output is the view of the shard that owns
+    the newest position (the paper's device-owns-its-partition rule).
+    On edge hardware this avoids any per-token collective; on TPU the
+    owner-select psum costs the same as the exact combine, so ``exact``
+    dominates for decode — recorded as a finding in EXPERIMENTS.md §Perf.
+
+Cache layout (per layer, by block kind):
+  attn/moe/shared_attn  {"k","v": (B, cap_l, Hkv, hd)} sharded over the
+                        sequence axes on dim 1; prism mode adds
+                        {"kz","vz": (B, P·L, Hkv, hd)} replicated means-KV.
+  attn_local            {"k","v": (B, W, Hkv, hd)} ring buffer over the
+                        window, replicated over ``model`` (W ≪ N/P).
+  mlstm                 {"s": (B, H, dk, dv+1) f32} constant-size state.
+  slstm                 {"s": (B, 3, H, hd) f32}.
+  mamba                 {"s": (B, H, d_state, hd) f32,
+                         "tail": (B, conv-1, d_in)} conv halo.
+
+SSM/hybrid decode is attention-free: O(1) state per token — the reason
+long_500k runs natively for xlstm/zamba2; dense archs earn it through the
+PRISM-compressed (or sliding-window) cache.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.attention import _gqa_logits, _gqa_output, prism_attention
+from ..core.masks import NEG_INF
+from ..core.protocol import PrismConfig
+from ..core.segment_means import segment_means, segment_sizes, segment_bounds
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from ..models.layers import (AttnSpec, attn_project_q, attn_project_kv,
+                             attn_output, dense, norm, mlp)
+from ..models.moe import moe_apply
+from ..models.ssm import (mlstm_decode, slstm_decode, mamba2_decode,
+                          mlstm_apply, slstm_apply, mamba2_apply)
+from ..sharding.context import ShardedPrismContext
+from ..sharding.rules import gather_tree, param_specs, spec_tree
+from ..launch.mesh import batch_axes, mesh_axes
+from .train import embed_vp, output_table
+
+
+@dataclass(frozen=True)
+class ServeHParams:
+    decode_mode: str = "exact"       # 'exact' | 'prism'
+    decode_tp: bool = False          # Megatron-TP position-wise ops (§Perf)
+    ssm_chunk: int = 128
+    means_cr: float = 16.0           # CR for the prism decode means cache
+
+
+# --------------------------------------------------------------------------
+# layout
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServeLayout:
+    """Cache placement.  Positions [0, prefill_len) are *prefill-aligned*:
+    shard ``s`` holds positions ``[s·n_loc0, (s+1)·n_loc0)`` in its slots
+    ``[0, n_loc0)``.  Decoded positions ``p >= prefill_len`` go round-robin:
+    shard ``(p - n0) % n_seq``, slot ``n_loc0 + (p - n0) // n_seq`` —
+    balanced writes, static shapes, and ``p = n0 - 1`` degrades exactly to
+    rewriting the final prefill slot (the dry-run's one-step case)."""
+    ba: tuple                        # batch mesh axes (may be empty)
+    seq_axes: tuple                  # mesh axes sharding the cache sequence
+    n_seq: int                       # total sequence shards (PRISM's P)
+    cap: int                         # global cache capacity (tokens)
+    cap_l: int                       # per-shard capacity
+    prefill_len: int                 # tokens laid down by prefill (n0)
+    L: int                           # segment means per shard (prism cache)
+
+    @property
+    def bspec(self):
+        return self.ba if self.ba else None
+
+    @property
+    def n_loc0(self) -> int:
+        return self.prefill_len // self.n_seq
+
+
+def make_layout(cfg: ModelConfig, mesh, batch: int, cap: int,
+                hp: ServeHParams, prefill_len: int | None = None
+                ) -> ServeLayout:
+    axes = mesh_axes(mesh)
+    ba = batch_axes(mesh)
+    nb = int(np.prod([axes[a] for a in ba]))
+    if batch % nb == 0:
+        seq = ("model",)
+    else:                             # long_500k: B=1 — replicate batch,
+        ba = ()                       # shard sequence over every axis
+        seq = tuple(mesh.axis_names)
+    n_seq = int(np.prod([axes[a] for a in seq]))
+    n0 = cap if prefill_len is None else prefill_len
+    assert cap % n_seq == 0 and n0 % n_seq == 0 and n0 <= cap, (cap, n0, n_seq)
+    cap_l = cap // n_seq
+    L = max(1, int(n0 // (hp.means_cr * n_seq)))
+    L = min(L, n0 // n_seq)
+    return ServeLayout(ba, seq, n_seq, cap, cap_l, n0, L)
+
+
+def grow_cache(cache, lay_from: ServeLayout, lay_to: ServeLayout):
+    """Pad a prefill cache (cap == prefill_len) out to a larger decode
+    capacity.  Only the sequence-sharded k/v leaves grow; the pad is
+    interleaved per shard (global view (..., P·c, H, hd) ->
+    (..., P·c', H, hd)).  Works on both stacked ('scan') and 'tail'
+    entries."""
+    pad = lay_to.cap_l - lay_from.cap_l
+    if pad == 0:
+        return cache
+
+    def fix(d):
+        out = {}
+        for key, v in d.items():
+            sd = v.ndim - 3                      # the sequence dim of k/v
+            if key in ("k", "v") and v.shape[sd] == lay_from.cap:
+                lead = v.shape[:sd]
+                v = v.reshape(*lead, lay_from.n_seq, lay_from.cap_l,
+                              *v.shape[sd + 1:])
+                widths = [(0, 0)] * v.ndim
+                widths[sd + 1] = (0, pad)
+                v = jnp.pad(v, widths)
+                v = v.reshape(*lead, lay_to.cap, *v.shape[sd + 2:])
+            out[key] = v
+        return out
+    return {"scan": [fix(c) for c in cache["scan"]],
+            "tail": [fix(c) for c in cache["tail"]]}
+
+
+# --------------------------------------------------------------------------
+# cache pytree (+ shardings / ShapeDtypeStructs for the dry-run)
+# --------------------------------------------------------------------------
+
+def layer_cache_shape(cfg: ModelConfig, kind: str, lay: ServeLayout,
+                      batch: int, hp: ServeHParams, dtype):
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    d_in = cfg.d_model * cfg.ssm_expand
+    if kind in ("attn", "moe", "shared_attn"):
+        # GLOBAL shapes (jit-level inputs); sharded over seq -> (B, cap_l)
+        c = {"k": ((batch, lay.cap, hkv, hd), dtype),
+             "v": ((batch, lay.cap, hkv, hd), dtype)}
+        if hp.decode_mode == "prism":
+            m = lay.n_seq * lay.L
+            c["kz"] = ((batch, m, hkv, hd), dtype)
+            c["vz"] = ((batch, m, hkv, hd), dtype)
+        return c
+    if kind == "attn_local":
+        w = min(cfg.window or lay.cap, lay.cap)
+        return {"k": ((batch, w, hkv, hd), dtype),
+                "v": ((batch, w, hkv, hd), dtype)}
+    if kind == "mlstm":
+        hdm = d_in // cfg.n_ssm_heads
+        return {"s": ((batch, cfg.n_ssm_heads, hdm, hdm + 1), jnp.float32)}
+    if kind == "slstm":
+        return {"s": ((batch, 3, cfg.n_ssm_heads,
+                       cfg.d_model // cfg.n_ssm_heads), jnp.float32)}
+    if kind == "mamba":
+        hdm = d_in // cfg.n_ssm_heads
+        return {"s": ((batch, cfg.n_ssm_heads, cfg.ssm_state, hdm),
+                      jnp.float32),
+                "tail": ((batch, cfg.ssm_conv - 1, d_in), dtype)}
+    raise ValueError(kind)
+
+
+def layer_cache_spec(kind: str, lay: ServeLayout, hp: ServeHParams):
+    b = lay.bspec
+    if kind in ("attn", "moe", "shared_attn"):
+        s = {"k": P(b, lay.seq_axes), "v": P(b, lay.seq_axes)}
+        if hp.decode_mode == "prism":
+            s["kz"] = P(b)
+            s["vz"] = P(b)
+        return s
+    if kind == "attn_local":
+        return {"k": P(b), "v": P(b)}
+    if kind in ("mlstm", "slstm"):
+        return {"s": P(b)}
+    if kind == "mamba":
+        return {"s": P(b), "tail": P(b)}
+    raise ValueError(kind)
+
+
+def cache_shapes(cfg: ModelConfig, lay: ServeLayout, batch: int,
+                 hp: ServeHParams, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (dry-run input stand-in; no allocation).
+    Mirrors the stacked parameter layout: {'scan': [u stacked trees with
+    leading n_units], 'tail': [...]}."""
+    u, n_units, _ = cfg.scan_split
+    kinds = cfg.block_kinds
+
+    def one(kind, lead=None):
+        shapes = layer_cache_shape(cfg, kind, lay, batch, hp, dtype)
+        return {k: jax.ShapeDtypeStruct(
+            ((lead,) + sh) if lead else sh, dt)
+            for k, (sh, dt) in shapes.items()}
+    return {"scan": [one(kinds[j], n_units) for j in range(u)],
+            "tail": [one(kinds[n_units * u + t])
+                     for t in range(len(kinds) - n_units * u)]}
+
+
+def cache_specs(cfg: ModelConfig, lay: ServeLayout, hp: ServeHParams):
+    u, n_units, _ = cfg.scan_split
+    kinds = cfg.block_kinds
+
+    def one(kind, stacked):
+        s = layer_cache_spec(kind, lay, hp)
+        if stacked:
+            s = {k: P(*((None,) + tuple(v))) for k, v in s.items()}
+        return s
+    return {"scan": [one(kinds[j], True) for j in range(u)],
+            "tail": [one(kinds[n_units * u + t], False)
+                     for t in range(len(kinds) - n_units * u)]}
+
+
+def init_cache(cfg: ModelConfig, lay: ServeLayout, batch: int,
+               hp: ServeHParams, dtype=jnp.float32):
+    """Zero-filled global-shape cache (host-mesh tests / examples)."""
+    shapes = cache_shapes(cfg, lay, batch, hp, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+# --------------------------------------------------------------------------
+# decode attention
+# --------------------------------------------------------------------------
+
+def _write_slot(cache_kv, new_row, slot, owner):
+    """Write (B,1,Hkv,hd) into the cache at a shard-local slot if owner."""
+    clamped = jnp.clip(slot, 0, cache_kv.shape[1] - 1)
+    upd = lax.dynamic_update_slice_in_dim(
+        cache_kv, new_row.astype(cache_kv.dtype), clamped, axis=1)
+    return jnp.where(owner, upd, cache_kv)
+
+
+def flash_decode_combine(q, k, v, valid, axes, scale):
+    """Exact distributed flash-decoding.  q (B,1,Hq,hd); k,v are LOCAL
+    cache shards (B,M,Hkv,hd); ``valid`` (M,) bool.  Combines partial
+    softmax stats over ``axes`` — O(B·Hq·hd) traffic, independent of N."""
+    s = _gqa_logits(q, k, scale)                          # (B,Hq,1,M)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m_p = jnp.max(s, axis=-1, keepdims=True)              # (B,Hq,1,1)
+    e = jnp.exp(s - m_p)
+    l_p = jnp.sum(e, axis=-1, keepdims=True)              # (B,Hq,1,1)
+    acc_p = _gqa_output(e.astype(v.dtype), v)             # (B,1,Hq,hd)
+    m_g = lax.pmax(m_p, axes) if axes else m_p
+    corr = jnp.exp(m_p - m_g)                             # (B,Hq,1,1)
+    l_c = l_p * corr
+    acc_c = acc_p * corr[:, :, 0, 0][:, None, :, None].astype(acc_p.dtype)
+    if axes:
+        l_c = lax.psum(l_c, axes)
+        acc_c = lax.psum(acc_c, axes)
+    denom = jnp.maximum(l_c[:, :, 0, 0], 1e-30)           # (B,Hq)
+    return acc_c / denom[:, None, :, None].astype(acc_c.dtype)
+
+
+def prism_decode_attention(q, k_loc, v_loc, kz, vz, valid, gz, owner,
+                           axes, scale):
+    """Paper-faithful decode: exact local columns (g=1 where valid) plus
+    remote Segment-Means columns (g = segment sizes; 0 for own shard),
+    scaling-aware softmax, owner's view selected via masked psum."""
+    k_all = jnp.concatenate([k_loc, kz.astype(k_loc.dtype)], axis=1)
+    v_all = jnp.concatenate([v_loc, vz.astype(v_loc.dtype)], axis=1)
+    g = jnp.concatenate([valid.astype(jnp.float32), gz])
+    s = _gqa_logits(q, k_all, scale)                      # (B,Hq,1,M)
+    log_g = jnp.where(g > 0, jnp.log(jnp.maximum(g, 1e-30)), NEG_INF)
+    s = s + log_g[None, None, None, :]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    w = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    out = _gqa_output(w.astype(v_all.dtype), v_all)       # (B,1,Hq,hd)
+    if axes:
+        out = lax.psum(jnp.where(owner, out, jnp.zeros_like(out)), axes)
+    return out
+
+
+# --------------------------------------------------------------------------
+# per-layer decode dispatch
+# --------------------------------------------------------------------------
+
+def _seq_index(seq_axes):
+    idx = lax.axis_index(seq_axes[0])
+    for a in seq_axes[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def _means_meta(lay: ServeLayout):
+    """Static (lo, hi, mid, sizes, shard_of) for the means-cache columns,
+    shard-major over the PREFILL region — matching both the
+    ShardedPrismContext._augment_prism ordering and the prefill capture."""
+    n0 = lay.n_loc0
+    lo0, hi0 = segment_bounds(n0, lay.L)
+    sizes = segment_sizes(n0, lay.L).astype(np.float32)
+    offs = np.repeat(np.arange(lay.n_seq) * n0, lay.L)
+    lo = np.tile(lo0, lay.n_seq) + offs
+    hi = np.tile(hi0, lay.n_seq) + offs
+    shard_of = np.repeat(np.arange(lay.n_seq), lay.L)
+    return lo, hi, (lo + hi) / 2.0, np.tile(sizes, lay.n_seq), shard_of
+
+
+def _decode_cols(lay: ServeLayout, idx, pos):
+    """(write_slot, owner, col_pos (cap_l,)) under the prefill-aligned
+    placement (see ServeLayout)."""
+    n0, n_loc0 = lay.prefill_len, lay.n_loc0
+    extra = pos - n0
+    slot = jnp.where(extra >= 0,
+                     n_loc0 + extra // lay.n_seq,
+                     pos - idx * n_loc0)
+    wr_shard = jnp.where(extra >= 0, extra % lay.n_seq,
+                         jnp.clip(pos // jnp.maximum(n_loc0, 1),
+                                  0, lay.n_seq - 1))
+    owner = (wr_shard == idx) & (slot >= 0) & (slot < lay.cap_l)
+    j = jnp.arange(lay.cap_l)
+    col_pos = jnp.where(
+        j < n_loc0,
+        idx * n_loc0 + j,
+        n0 + (j - n_loc0) * lay.n_seq + idx)
+    return slot, owner, col_pos
+
+
+def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
+                lay: ServeLayout, hp: ServeHParams, *, local: bool):
+    """x (B,1,D) replicated over seq axes -> (out (B,1,D), new layer cache)."""
+    xn = norm(p["ln1"], x, cfg.norm_kind)
+    rp = jnp.reshape(pos, (1,))
+    q = attn_project_q(p["attn"], spec, xn, rp)
+    k_new, v_new = attn_project_kv(p["attn"], spec, xn, rp)
+    scale = spec.head_dim ** -0.5
+
+    if local:                                  # ring window cache, replicated
+        w = c["k"].shape[1]
+        slot = pos % w
+        k_c = lax.dynamic_update_slice_in_dim(
+            c["k"], k_new.astype(c["k"].dtype), slot, axis=1)
+        v_c = lax.dynamic_update_slice_in_dim(
+            c["v"], v_new.astype(c["v"].dtype), slot, axis=1)
+        j = jnp.arange(w)
+        col_pos = pos - ((pos - j) % w)        # ring slot -> global position
+        valid = col_pos >= 0
+        if spec.window:
+            valid &= col_pos > pos - spec.window
+        out = flash_decode_combine(q, k_c, v_c, valid, (), scale)
+        new_c = dict(c, k=k_c, v=v_c)
+    else:
+        idx = _seq_index(lay.seq_axes)
+        slot, owner, col_pos = _decode_cols(lay, idx, pos)
+        k_c = _write_slot(c["k"], k_new, slot, owner)
+        v_c = _write_slot(c["v"], v_new, slot, owner)
+        valid = col_pos <= pos
+        if hp.decode_mode == "prism" and "kz" in c:
+            _, hi, _, sizes, shard_of = _means_meta(lay)
+            gz = jnp.where(
+                (jnp.asarray(shard_of) != idx) & (jnp.asarray(hi) <= pos),
+                jnp.asarray(sizes), 0.0)
+            out = prism_decode_attention(
+                q, k_c, v_c, c["kz"], c["vz"], valid, gz,
+                owner, lay.seq_axes, scale)
+        else:
+            out = flash_decode_combine(q, k_c, v_c, valid,
+                                       lay.seq_axes, scale)
+        new_c = dict(c, k=k_c, v=v_c)
+
+    o = attn_output(p["attn"], out)
+    if cfg.parallel_block:
+        o = o + mlp(p["mlp"], xn, cfg.mlp_kind)
+    return o, new_c
+
+
+def mlp_tp(p, x, kind: str, *, tp_ffn: bool):
+    """Feed-forward with column-parallel up/gate and row-parallel down
+    (weights stay sharded over 'model'; one psum of (B,1,D))."""
+    y = mlp(p, x, kind)
+    return lax.psum(y, "model") if tp_ffn else y
+
+
+def attn_decode_tp(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
+                   lay: ServeLayout, hp: ServeHParams, *,
+                   attn_tp: bool, ffn_tp: bool):
+    """Tensor-parallel single-token attention (§Perf H1).
+
+    wq column-parallel (this shard computes Hq/tp heads, then a tiny
+    head all-gather so every shard can attend over its LOCAL cache shard
+    with ALL heads — flash-decoding needs the full head dim against the
+    sequence shard), wo row-parallel (each shard consumes its own head
+    slice; psum of (B,1,D)).  wk/wv are replicated (GQA keeps them
+    small).  Per-token parameter traffic: ZERO — the baseline's
+    per-layer FSDP gather (the whole weight matrix per token) becomes
+    one activation psum.
+    """
+    tp = lax.axis_size("model")
+    xn = norm(p["ln1"], x, cfg.norm_kind)
+    rp = jnp.reshape(pos, (1,))
+    b = x.shape[0]
+
+    if attn_tp:
+        hq_loc = spec.n_heads // tp
+        q_loc = dense(p["attn"]["wq"], xn).reshape(b, 1, hq_loc,
+                                                   spec.head_dim)
+        if spec.qk_norm:
+            q_loc = norm(p["attn"]["qnorm"], q_loc)
+        if spec.rope_theta is not None:
+            from ..models.layers import rope
+            q_loc = rope(q_loc, rp, theta=spec.rope_theta)
+        q = lax.all_gather(q_loc, "model", axis=2, tiled=True)
+    else:
+        q = attn_project_q(p["attn"], spec, xn, rp)
+    k_new, v_new = attn_project_kv(p["attn"], spec, xn, rp)
+    scale = spec.head_dim ** -0.5
+
+    idx = _seq_index(lay.seq_axes)
+    slot, owner, col_pos = _decode_cols(lay, idx, pos)
+    k_c = _write_slot(c["k"], k_new, slot, owner)
+    v_c = _write_slot(c["v"], v_new, slot, owner)
+    valid = col_pos <= pos
+    out = flash_decode_combine(q, k_c, v_c, valid, lay.seq_axes, scale)
+    new_c = dict(c, k=k_c, v=v_c)
+
+    if attn_tp:
+        midx = lax.axis_index("model")
+        hq_loc = spec.n_heads // tp
+        out_loc = lax.dynamic_slice_in_dim(out, midx * hq_loc, hq_loc,
+                                           axis=2)
+        o = dense(p["attn"]["wo"], out_loc.reshape(b, 1, -1))
+        o = lax.psum(o, "model")
+    else:
+        o = attn_output(p["attn"], out)
+    if cfg.parallel_block:
+        o = o + mlp_tp(p["mlp"], xn, cfg.mlp_kind, tp_ffn=ffn_tp)
+    return o, new_c
+
+
+class DecodeMoeCtx:
+    """Expert exchange for single-token decode: all_to_all over 'model'
+    (expert parallelism); with ``tp`` the per-expert d_ff dim is sharded
+    over 'data' and the down-projection partials are psum'd (expert-TP —
+    no per-token expert-weight gather, ever)."""
+
+    def __init__(self, tp: bool = False):
+        self.tp = tp
+
+    def expert_exchange(self, buf):
+        out = lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                             tiled=True)
+        if self.tp:
+            # expert-TP: the d_ff slices live across 'data', but so do the
+            # tokens — share tokens first (activation-sized), compute the
+            # dff partials everywhere, psum in expert_reduce, slice back.
+            out = lax.all_gather(out, "data", axis=1, tiled=True)
+
+        def undo(y):
+            if self.tp:
+                d = lax.axis_index("data")
+                s = y.shape[1] // lax.axis_size("data")
+                y = lax.dynamic_slice_in_dim(y, d * s, s, axis=1)
+            return lax.all_to_all(y, "model", split_axis=1, concat_axis=0,
+                                  tiled=True)
+        return out, undo
+
+    def expert_reduce(self, y):
+        return lax.psum(y, "data") if self.tp else y
+
+    def ffn_reduce(self, y):
+        return lax.psum(y, "model") if self.tp else y
+
+
+def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
+                 lay: ServeLayout, hp: ServeHParams,
+                 tp_flags=(False, False)):
+    """One residual block, single-token decode.  Returns (x, new_cache)."""
+    attn_tp, ffn_tp = tp_flags
+    use_tp = hp.decode_tp and kind in ("attn", "moe", "shared_attn")
+
+    def ffn(pp, xx):
+        if hp.decode_tp and ffn_tp:
+            return mlp_tp(pp, xx, cfg.mlp_kind, tp_ffn=True)
+        return mlp(pp, xx, cfg.mlp_kind)
+
+    if kind in ("attn", "attn_local", "moe"):
+        spec = T.attn_spec(cfg, kind)
+        if use_tp:
+            o, c = attn_decode_tp(p, spec, cfg, x, c, pos, lay, hp,
+                                  attn_tp=attn_tp, ffn_tp=ffn_tp)
+        else:
+            o, c = attn_decode(p, spec, cfg, x, c, pos, lay, hp,
+                               local=(kind == "attn_local"))
+        x = x + o
+        if cfg.parallel_block:
+            return x, c
+        if kind == "moe":
+            y, _ = moe_apply(p["moe"], norm(p["ln2"], x, cfg.norm_kind),
+                             cfg, DecodeMoeCtx(tp=hp.decode_tp))
+            x = x + y
+        elif cfg.d_ff:
+            x = x + ffn(p["mlp"], norm(p["ln2"], x, cfg.norm_kind))
+        return x, c
+    if kind == "shared_attn":
+        spec = T.attn_spec(cfg, "attn")
+        if use_tp:
+            o, c = attn_decode_tp(shared, spec, cfg, x, c, pos, lay, hp,
+                                  attn_tp=attn_tp, ffn_tp=ffn_tp)
+        else:
+            o, c = attn_decode(shared, spec, cfg, x, c, pos, lay, hp,
+                               local=False)
+        x = x + o
+        x = x + ffn(shared["mlp"], norm(shared["ln2"], x, cfg.norm_kind))
+        return x, c
+    if kind == "mlstm":
+        y, s = mlstm_decode(p["cell"], norm(p["ln"], x, cfg.norm_kind),
+                            c["s"], heads=cfg.n_ssm_heads)
+        return x + y, dict(c, s=s)
+    if kind == "slstm":
+        y, s = slstm_decode(p["cell"], norm(p["ln"], x, cfg.norm_kind),
+                            c["s"], heads=cfg.n_ssm_heads)
+        return x + y, dict(c, s=s)
+    if kind == "mamba":
+        y, cc = mamba2_decode(p["cell"], norm(p["ln"], x, cfg.norm_kind),
+                              c, heads=cfg.n_ssm_heads,
+                              d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                              conv=cfg.ssm_conv)
+        return x + y, cc
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# decode embedding / head
+# --------------------------------------------------------------------------
+
+def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
+                sharded_vocab):
+    """token (B,) -> x (B,1,D), replicated over the sequence axes."""
+    table = params["embed"]["table"]
+    if sharded_vocab:
+        v_loc = table.shape[0]
+        vstart = lax.axis_index("model") * v_loc
+        t = token - vstart
+        ok = (t >= 0) & (t < v_loc)
+        e = jnp.take(table, jnp.clip(t, 0, v_loc - 1), axis=0)
+        x = lax.psum(jnp.where(ok[:, None], e, jnp.zeros_like(e)),
+                     "model")[:, None]
+    else:
+        table = gather_tree(params["embed"], rules["embed"])["table"]
+        x = jnp.take(table, token, axis=0)[:, None]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.pos == "learned":
+        tbl = gather_tree(params["pos_embed"], rules["pos_embed"])["table"]
+        x = x + lax.dynamic_slice_in_dim(tbl, pos, 1).astype(x.dtype)
+    elif cfg.pos == "sincos":
+        half = cfg.d_model // 2
+        freq = jnp.exp(-np.log(10000.0)
+                       * jnp.arange(half, dtype=jnp.float32) / half)
+        ang = pos.astype(jnp.float32) * freq
+        x = x + jnp.concatenate(
+            [jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+    return x
+
+
+# --------------------------------------------------------------------------
+# serve (decode) step factory
+# --------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, mesh, params, *,
+                    batch: int, cap: int, prefill_len: int | None = None,
+                    hp: ServeHParams = ServeHParams()):
+    """jitted (params, cache, token (B,), pos ()) -> (logits, cache).
+
+    ``logits`` is (B, V) — vocab-sharded over 'model' when the embedding
+    table is (the returned lspec says which).
+    """
+    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len)
+    if hp.decode_tp:
+        from ..sharding.rules import decode_param_specs
+        rules = decode_param_specs(params, mesh, cfg.vocab_size, cfg)
+        ax = mesh_axes(mesh).get("model", 1)
+        tp_flags = (cfg.n_heads % ax == 0 and not cfg.attn_bias
+                    and (cfg.n_heads * cfg.hd) % ax == 0,
+                    bool(cfg.d_ff) and cfg.d_ff % ax == 0
+                    and not cfg.attn_bias)
+    else:
+        rules = param_specs(params, mesh, cfg.vocab_size)
+        tp_flags = (False, False)
+    pspecs = spec_tree(rules)
+    cspecs = cache_specs(cfg, lay, hp)
+    vocab_sharded = (rules["embed"]["table"].kind == "vocab")
+    shared_rules = rules.get("shared")
+
+    u, n_units, _ = cfg.scan_split
+    unit_kinds = cfg.block_kinds[:u]
+
+    def body(params_local, cache_local, token, pos):
+        x = embed_token(cfg, params_local, rules, token, pos,
+                        sharded_vocab=vocab_sharded)
+
+        def unit_body(x, xs):
+            p_sl, c_sl = xs
+            shared = (gather_tree(params_local["shared"], shared_rules)
+                      if shared_rules else None)
+            new = []
+            for j, kind in enumerate(unit_kinds):
+                p = gather_tree(p_sl[j], rules["scan"][j])
+                x, nc = block_decode(cfg, kind, p, shared, x, c_sl[j],
+                                     pos, lay, hp, tp_flags)
+                new.append(nc)
+            return x, tuple(new)
+
+        x, new_stacks = lax.scan(
+            unit_body, x,
+            (tuple(params_local["scan"]), tuple(cache_local["scan"])))
+
+        new_tail = []
+        for t, tree in enumerate(params_local["tail"]):
+            kind = cfg.block_kinds[n_units * u + t]
+            p = gather_tree(tree, rules["tail"][t])
+            shared = (gather_tree(params_local["shared"], shared_rules)
+                      if shared_rules else None)
+            x, nc = block_decode(cfg, kind, p, shared, x,
+                                 cache_local["tail"][t], pos, lay, hp,
+                                 tp_flags)
+            new_tail.append(nc)
+
+        x = norm(params_local["final_norm"], x, cfg.norm_kind)
+        table = output_table(params_local, cfg)
+        logits = (x[:, 0] @ table.T.astype(x.dtype)).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        return logits, {"scan": list(new_stacks), "tail": new_tail}
+
+    lspec = P(lay.bspec, "model" if vocab_sharded else None)
+    body_sm = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, cspecs, P(lay.bspec), P()),
+        out_specs=(lspec, cspecs),
+        check_vma=False)
+
+    sh = functools.partial(NamedSharding, mesh)
+    jitted = jax.jit(
+        body_sm,
+        in_shardings=(jax.tree.map(sh, pspecs),
+                      jax.tree.map(sh, cspecs),
+                      sh(P(lay.bspec)), sh(P())),
+        out_shardings=(sh(lspec), jax.tree.map(sh, cspecs)),
+        donate_argnums=(1,),
+    )
+    return jitted, lay, rules, lspec
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def prefill_attn(p, spec: AttnSpec, cfg: ModelConfig, x, ctx, lay,
+                 hp: ServeHParams, prism_augment: bool):
+    """Attention sublayer that also captures this layer's decode cache."""
+    xq, akv = ctx.augment(x, spec)
+    xq_n = norm(p["ln1"], xq, cfg.norm_kind)
+    xh_n = norm(p["ln1"], akv.x_hat, cfg.norm_kind)
+    q = attn_project_q(p["attn"], spec, xq_n, akv.row_pos)
+    k, v = attn_project_kv(p["attn"], spec, xh_n, akv.col_pos)
+    o = prism_attention(q, k, v, g=akv.g, mask=akv.mask,
+                        block=cfg.attn_block)
+    o = attn_output(p["attn"], o)
+    if cfg.parallel_block:
+        o = o + mlp(p["mlp"], xq_n, cfg.mlp_kind)
+
+    n_loc = x.shape[1]
+    if spec.window is not None:
+        # window augment puts the local block LAST; ring cache = global
+        # tail = last shard's last W rows, scattered to ring order.
+        w = min(spec.window, lay.cap)
+        assert n_loc >= w, "window larger than per-shard tokens"
+        kw = ctx.last_shard(k[:, -w:])
+        vw = ctx.last_shard(v[:, -w:])
+        slots = np.arange(lay.cap - w, lay.cap) % w
+        order = np.zeros(w, np.int64)
+        order[slots] = np.arange(w)
+        cache = {"k": jnp.take(kw, jnp.asarray(order), axis=1),
+                 "v": jnp.take(vw, jnp.asarray(order), axis=1)}
+        return ctx.finalize(o), cache
+
+    if prism_augment:
+        k_loc, v_loc = k[:, :n_loc], v[:, :n_loc]   # local block first
+    else:                                           # voltage: full sequence
+        start = ctx._index() * n_loc
+        k_loc = lax.dynamic_slice_in_dim(k, start, n_loc, axis=1)
+        v_loc = lax.dynamic_slice_in_dim(v, start, n_loc, axis=1)
+    pad = lay.cap_l - n_loc
+    if pad:
+        k_loc = jnp.pad(k_loc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_loc = jnp.pad(v_loc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k_loc, "v": v_loc}
+    if hp.decode_mode == "prism":
+        m = lay.n_seq * lay.L
+        if prism_augment:
+            # means columns sit right after the local block in x_hat
+            cache["kz"] = k[:, n_loc:n_loc + m]
+            cache["vz"] = v[:, n_loc:n_loc + m]
+        else:                           # voltage prefill: compute means-KV
+            z = segment_means(x, lay.L)
+            zg = ctx._gather(z)
+            b = x.shape[0]
+            z_all = jnp.moveaxis(zg, 0, 1).reshape(b, m, x.shape[-1])
+            _, _, mid, _, _ = _means_meta(lay)
+            kz, vz = attn_project_kv(
+                p["attn"], spec, norm(p["ln1"], z_all, cfg.norm_kind),
+                jnp.asarray(mid, jnp.float32))
+            cache["kz"], cache["vz"] = kz, vz
+    return ctx.finalize(o), cache
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, params, prism: PrismConfig,
+                      *, batch: int, n: int,
+                      hp: ServeHParams = ServeHParams()):
+    """jitted (params, batch_dict) -> (last-token logits, decode cache).
+
+    ``batch_dict`` = {"tokens": (B, N)} (+ "embeds" for vlm/audio stubs).
+    """
+    lay = make_layout(cfg, mesh, batch, n, hp)
+    rules = param_specs(params, mesh, cfg.vocab_size)
+    pspecs = spec_tree(rules)
+    cspecs = cache_specs(cfg, lay, hp)
+    vocab_sharded = (rules["embed"]["table"].kind == "vocab")
+    shared_rules = rules.get("shared")
+    n_loc = n // lay.n_seq
+    prism_cfg = prism.with_(P=lay.n_seq,
+                            L=lay.L if hp.decode_mode == "prism"
+                            else prism.L)
+    prism_augment = prism_cfg.mode == "prism"
+
+    def body(params_local, batch_local):
+        ctx = ShardedPrismContext(
+            prism_cfg, axis=lay.seq_axes[-1], n_shards=lay.n_seq,
+            seq_shards=lay.seq_axes[:-1], prefix_len=cfg.prefix_len)
+        tokens = batch_local.get("tokens")
+        embeds = batch_local.get("embeds")
+        start = ctx._index() * n_loc
+        if tokens is not None:
+            x = embed_vp(params_local["embed"]["table"], tokens,
+                         sharded_vocab=vocab_sharded)
+        else:
+            fp = gather_tree(params_local["frontend_proj"],
+                             rules["frontend_proj"])
+            x = dense(fp, embeds)
+        if cfg.arch_type == "vlm" and embeds is not None and tokens is not None:
+            fp = gather_tree(params_local["frontend_proj"],
+                             rules["frontend_proj"])
+            fe = dense(fp, embeds)                 # (B, prefix, D) replicated
+            pos = start + jnp.arange(n_loc)
+            idx = jnp.clip(pos, 0, cfg.prefix_len - 1)
+            fe_rows = jnp.take(fe, idx, axis=1)
+            x = jnp.where((pos < cfg.prefix_len)[None, :, None], fe_rows, x)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        if cfg.pos == "learned":
+            tbl = gather_tree(params_local["pos_embed"],
+                              rules["pos_embed"])["table"]
+            x = x + lax.dynamic_slice_in_dim(tbl, start, n_loc
+                                             ).astype(x.dtype)
+        elif cfg.pos == "sincos":
+            x = x + T.sincos_embed(n_loc, cfg.d_model, start).astype(x.dtype)
+
+        u, n_units, _ = cfg.scan_split
+        unit_kinds = cfg.block_kinds[:u]
+
+        def one_block(kind, p, shared, x):
+            if kind in ("attn", "attn_local", "moe", "shared_attn"):
+                pp = shared if kind == "shared_attn" else p
+                spec = T.attn_spec(cfg, "attn" if kind == "shared_attn"
+                                   else kind)
+                o, c = prefill_attn(pp, spec, cfg, x, ctx, lay, hp,
+                                    prism_augment)
+                x = x + o
+                if kind == "moe" and not cfg.parallel_block:
+                    y, _ = moe_apply(p["moe"],
+                                     norm(p["ln2"], x, cfg.norm_kind),
+                                     cfg, ctx)
+                    x = x + y
+                elif kind == "shared_attn":
+                    x = x + mlp(shared["mlp"],
+                                norm(shared["ln2"], x, cfg.norm_kind),
+                                cfg.mlp_kind)
+                elif cfg.d_ff and not cfg.parallel_block:
+                    x = x + mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_kind),
+                                cfg.mlp_kind)
+                return x, c
+            if kind == "mlstm":
+                y, s = mlstm_apply(p["cell"],
+                                   norm(p["ln"], x, cfg.norm_kind),
+                                   heads=cfg.n_ssm_heads, ctx=ctx,
+                                   chunk=hp.ssm_chunk, return_state=True)
+                return x + y, {"s": s}
+            if kind == "slstm":
+                y, s = slstm_apply(p["cell"],
+                                   norm(p["ln"], x, cfg.norm_kind),
+                                   heads=cfg.n_ssm_heads, ctx=ctx,
+                                   return_state=True)
+                return x + y, {"s": s}
+            if kind == "mamba":
+                y, c = mamba2_apply(p["cell"],
+                                    norm(p["ln"], x, cfg.norm_kind),
+                                    heads=cfg.n_ssm_heads,
+                                    d_state=cfg.ssm_state,
+                                    expand=cfg.ssm_expand,
+                                    conv=cfg.ssm_conv, ctx=ctx,
+                                    chunk=hp.ssm_chunk, return_state=True)
+                return x + y, c
+            raise ValueError(kind)
+
+        def unit_body(x, sliced):
+            shared = (gather_tree(params_local["shared"], shared_rules)
+                      if shared_rules else None)
+            cs = []
+            for j, kind in enumerate(unit_kinds):
+                p = gather_tree(sliced[j], rules["scan"][j])
+                x, c = one_block(kind, p, shared, x)
+                cs.append(c)
+            return x, tuple(cs)
+
+        x, cache_stacks = lax.scan(unit_body, x,
+                                   tuple(params_local["scan"]))
+        tail_caches = []
+        for t, tree in enumerate(params_local["tail"]):
+            kind = cfg.block_kinds[n_units * u + t]
+            p = gather_tree(tree, rules["tail"][t])
+            shared = (gather_tree(params_local["shared"], shared_rules)
+                      if shared_rules else None)
+            x, c = one_block(kind, p, shared, x)
+            tail_caches.append(c)
+
+        x = norm(params_local["final_norm"], x, cfg.norm_kind)
+        last = ctx.last_shard(x[:, -1])                    # (B, D)
+        table = output_table(params_local, cfg)
+        logits = (last @ table.T.astype(last.dtype)).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        return logits, {"scan": list(cache_stacks), "tail": tail_caches}
+
+    bspec = {}
+    if cfg.frontend == "encodec_stub":
+        bspec["embeds"] = P(lay.bspec, lay.seq_axes, None)
+    else:
+        bspec["tokens"] = P(lay.bspec, lay.seq_axes)
+        if cfg.arch_type == "vlm":
+            bspec["embeds"] = P(lay.bspec, None, None)
+    lspec = P(lay.bspec, "model" if vocab_sharded else None)
+    body_sm = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, bspec),
+        out_specs=(lspec, cspecs),
+        check_vma=False)
+
+    sh = functools.partial(NamedSharding, mesh)
+    jitted = jax.jit(
+        body_sm,
+        in_shardings=(jax.tree.map(sh, pspecs),
+                      jax.tree.map(sh, bspec)),
+        out_shardings=(sh(lspec), jax.tree.map(sh, cspecs)),
+    )
+    return jitted, lay, rules, lspec

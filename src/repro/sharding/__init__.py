@@ -1,0 +1,2 @@
+from .context import ShardedPrismContext  # noqa: F401
+from .rules import param_specs, GradReduce  # noqa: F401

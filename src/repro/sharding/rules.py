@@ -1,0 +1,253 @@
+"""Parameter sharding rules (path-based, over the production mesh).
+
+Layout summary (DESIGN.md §4):
+
+  * expert weights   — expert dim over ``model`` (+ FSDP over ``data`` on
+                       the widest remaining dim): expert parallelism.
+  * embed / lm_head  — vocab dim over ``model`` (vocab-parallel input
+                       lookup and loss; avoids gathering a 256k×d table).
+  * other ≥2-D       — FSDP over ``data`` on the first divisible dim;
+                       gathered per-layer on use inside the shard_map body
+                       (the all_gather's transpose reduce-scatters grads —
+                       ZeRO-3 for free).
+  * small / 1-D      — replicated.
+  * ``pod``          — parameters replicated across pods (pure DP);
+                       gradients psum over ``pod``.
+
+Each rule also records which mesh axes the *gradient* must still be
+psum-reduced over inside the body (axes whose sum is NOT already handled
+by an all_gather transpose).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamRule:
+    spec: P                      # partition spec over the mesh
+    gather_dim: int | None       # dim all-gathered over 'data' in the body
+    grad_reduce: tuple           # axes to psum gradients over
+    kind: str                    # 'expert' | 'vocab' | 'fsdp' | 'replicated'
+
+
+# threshold below which we don't bother sharding
+_FSDP_MIN = 1 << 16
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def rule_for(path: str, shape: tuple, mesh_axes: dict,
+             vocab_size: int) -> ParamRule:
+    """Stacked scan layers ('scan/<j>/...') carry a leading depth dim:
+    the rule is computed on the SLICED shape (the form the shard_map body
+    sees inside lax.scan) and the stored spec gets a leading None.
+    ``gather_dim`` refers to the sliced leaf."""
+    if path.startswith("scan/"):
+        inner = rule_for(path.split("/", 2)[2], shape[1:], mesh_axes,
+                         vocab_size)
+        return ParamRule(P(*((None,) + tuple(inner.spec))),
+                         inner.gather_dim, inner.grad_reduce, inner.kind)
+    return _rule_for_flat(path, shape, mesh_axes, vocab_size)
+
+
+def _rule_for_flat(path: str, shape: tuple, mesh_axes: dict,
+                   vocab_size: int) -> ParamRule:
+    data = mesh_axes.get("data", 1)
+    model = mesh_axes.get("model", 1)
+    has_pod = "pod" in mesh_axes
+    pod = ("pod",) if has_pod else ()
+
+    # --- experts: (E, ...) with E % model == 0 ---
+    if "/experts/" in path or path.endswith("experts"):
+        spec = [None] * len(shape)
+        spec[0] = "model"
+        gdim = None
+        if len(shape) >= 2:
+            widest = int(np.argmax(shape[1:])) + 1
+            if shape[widest] % data == 0 and np.prod(shape) >= _FSDP_MIN:
+                spec[widest] = "data"
+                gdim = widest
+        return ParamRule(P(*spec), gdim, pod, "expert")
+
+    # --- vocab-dimension params: embed table / untied lm_head ---
+    if path == "embed/table" or "lm_head" in path:
+        cands = [i for i, s in enumerate(shape) if s == vocab_size]
+        # embed table is (vocab, d); lm_head w is (d, vocab) — when
+        # d == vocab both dims match, so pick by layout.
+        vdim = (cands[-1] if "lm_head" in path else cands[0]) if cands else 0
+        if shape[vdim] % model == 0:
+            spec = [None] * len(shape)
+            spec[vdim] = "model"
+            return ParamRule(P(*spec), None, pod + ("data",), "vocab")
+        return ParamRule(P(), None, pod + ("data", "model"), "replicated")
+
+    # --- generic FSDP: 2D (data × model) when two dims divide ---
+    # Sharding a second dim over 'model' turns the gradient all-reduce
+    # over 'model' into the all-gather transpose's reduce-scatter (half
+    # the link bytes) and cuts per-device param+optimizer memory by
+    # another model-fold (§Perf H2).
+    if len(shape) >= 2 and int(np.prod(shape)) >= _FSDP_MIN:
+        dim_d = next((d for d, s in enumerate(shape) if s % data == 0),
+                     None)
+        if dim_d is not None:
+            spec = [None] * len(shape)
+            spec[dim_d] = "data"
+            dim_m = next((d for d, s in enumerate(shape)
+                          if d != dim_d and s % model == 0), None)
+            if dim_m is not None:
+                spec[dim_m] = "model"
+                return ParamRule(P(*spec), (dim_d, dim_m), pod, "fsdp2d")
+            return ParamRule(P(*spec), dim_d, pod + ("model",), "fsdp")
+
+    return ParamRule(P(), None, pod + ("data", "model"), "replicated")
+
+
+def param_specs(params, mesh, vocab_size: int):
+    """Pytree of ParamRule matching ``params`` (arrays OR ShapeDtypeStructs
+    — the dry-run builds rules from eval_shape trees without allocating)."""
+    mesh_ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    rules = [rule_for(_path_str(p), getattr(leaf, "shape", None)
+                      or np.shape(leaf), mesh_ax, vocab_size)
+             for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, rules)
+
+
+def spec_tree(rules):
+    return jax.tree.map(lambda r: r.spec, rules,
+                        is_leaf=lambda x: isinstance(x, ParamRule))
+
+
+def gather_tree(local_params, rules):
+    """FSDP all-gather inside a shard_map body (per layer): over 'data'
+    (1D) or 'data'+'model' (2D, tuple gather_dim)."""
+    def g(x, r):
+        if r.gather_dim is None:
+            return x
+        if isinstance(r.gather_dim, tuple):
+            dd, dm = r.gather_dim
+            x = lax.all_gather(x, "data", axis=dd, tiled=True)
+            return lax.all_gather(x, "model", axis=dm, tiled=True)
+        return lax.all_gather(x, "data", axis=r.gather_dim, tiled=True)
+    return jax.tree.map(g, local_params, rules,
+                        is_leaf=lambda x: isinstance(x, ParamRule))
+
+
+def decode_rule_for(path: str, shape: tuple, mesh_axes: dict,
+                    vocab_size: int, *, attn_tp: bool, ffn_tp: bool
+                    ) -> ParamRule:
+    """Decode-time tensor-parallel layout (§Perf hillclimb H1).
+
+    FSDP's gather-per-layer re-moves the full parameter set across the
+    mesh for every decoded token — the collective-bound decode baseline.
+    For decode we instead keep weights SHARDED over ``model`` Megatron
+    style and psum small activations:
+
+      wq, mlp up/gate   column-parallel  P(None, 'model')
+      wo, mlp down      row-parallel     P('model', None)
+      wk/wv, norms, ssm cells, embeddings' friends: replicated (small)
+      experts           unchanged (expert-parallel over 'model')
+      embed/lm_head     vocab-parallel over 'model' (unchanged)
+
+    kind='tp_col'/'tp_row'/'replicated'; gather_dim is always None — the
+    decode body never all-gathers parameters.
+    """
+    model = mesh_axes.get("model", 1)
+    data = mesh_axes.get("data", 1)
+    if path.startswith("scan/"):
+        inner = decode_rule_for(path.split("/", 2)[2], shape[1:], mesh_axes,
+                                vocab_size, attn_tp=attn_tp, ffn_tp=ffn_tp)
+        return ParamRule(P(*((None,) + tuple(inner.spec))), None,
+                         inner.grad_reduce, inner.kind)
+    if "/experts/" in path or path.endswith("experts"):
+        # expert-parallel over 'model' + expert-TP over 'data': the
+        # per-expert d_ff dim is column-(up/gate)/row-(down)-split so no
+        # per-token gather is ever needed (arctic: 58 GB/chip replicated
+        # otherwise); moe_apply psums the down partials over 'data'.
+        spec = [None] * len(shape)
+        spec[0] = "model"
+        kind = "expert"
+        if len(shape) == 3:
+            if path.endswith("down/w") and shape[1] % data == 0:
+                spec[1] = "data"
+                kind = "expert_tp_row"
+            elif shape[2] % data == 0:          # up/gate
+                spec[2] = "data"
+                kind = "expert_tp_col"
+        return ParamRule(P(*spec), None, (), kind)
+    if path == "embed/table" or "lm_head" in path:
+        return _rule_for_flat(path, shape, mesh_axes, vocab_size)
+    if attn_tp and len(shape) == 2 and path.endswith("wq/w") \
+            and shape[1] % model == 0:
+        return ParamRule(P(None, "model"), None, (), "tp_col")
+    if attn_tp and len(shape) == 2 and path.endswith("wo/w") \
+            and shape[0] % model == 0:
+        return ParamRule(P("model", None), None, (), "tp_row")
+    is_mlp = ("mlp/" in path) and ("cell/" not in path)   # incl. dense_mlp
+    if ffn_tp and is_mlp and len(shape) == 2:
+        if (path.endswith("up/w") or path.endswith("gate/w")) \
+                and shape[1] % model == 0:
+            return ParamRule(P(None, "model"), None, (), "tp_col")
+        if path.endswith("down/w") and shape[0] % model == 0:
+            return ParamRule(P("model", None), None, (), "tp_row")
+    return ParamRule(P(), None, (), "replicated")
+
+
+def decode_param_specs(params, mesh, vocab_size: int, cfg):
+    """Pytree of decode-TP ParamRules (see decode_rule_for)."""
+    mesh_ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = mesh_ax.get("model", 1)
+    attn_tp = (cfg.n_heads % model == 0 and not cfg.attn_bias
+               and (cfg.n_heads * cfg.hd) % model == 0)
+    ffn_tp = (cfg.d_ff % model == 0 and not cfg.attn_bias
+              if cfg.d_ff else False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    rules = [decode_rule_for(
+        _path_str(p), getattr(leaf, "shape", None) or np.shape(leaf),
+        mesh_ax, vocab_size, attn_tp=attn_tp, ffn_tp=ffn_tp)
+        for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, rules)
+
+
+class GradReduce:
+    """psum gradients over the axes each rule still needs."""
+
+    @staticmethod
+    def apply(grads, rules, mesh):
+        names = set(mesh.axis_names)
+
+        def red(g, r):
+            axes = tuple(a for a in r.grad_reduce if a in names)
+            return lax.psum(g, axes) if axes else g
+        return jax.tree.map(red, grads, rules,
+                            is_leaf=lambda x: isinstance(x, ParamRule))
+
+
+def opt_state_specs(rules, params, mesh):
+    """m/v mirror the param spec, additionally sharded over spare axes on
+    the widest unsharded dim (ZeRO-ish optimizer-state sharding)."""
+    mesh_ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def s(r, p):
+        shape = getattr(p, "shape", None)
+        if shape is None:
+            shape = np.shape(p)
+        used = set(a for a in r.spec if a)
+        spare = [a for a in ("model", "pod") if a in mesh_ax and a not in used]
+        spec = list(r.spec) + [None] * (len(shape) - len(r.spec))
+        for dim, sz in enumerate(shape):
+            if spec[dim] is None and spare and sz % mesh_ax[spare[0]] == 0 \
+                    and int(np.prod(shape)) >= _FSDP_MIN:
+                spec[dim] = spare.pop(0)
+                break
+        return P(*spec)
+    return jax.tree.map(s, rules, params,
+                        is_leaf=lambda x: isinstance(x, ParamRule))

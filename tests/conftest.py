@@ -1,0 +1,8 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — unit tests and benches must see the real
+# single CPU device.  Multi-device tests run via subprocess runners
+# (test_distributed.py) that set --xla_force_host_platform_device_count
+# in the child environment only.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,168 @@
+"""The identities the reproduction rests on (DESIGN.md §9):
+
+  1. scaling-aware softmax ≡ softmax over row-duplicated K/V (Eq. 12-15)
+  2. attention is permutation-invariant in K/V rows (Eq. 5)
+  3. CR=1 (segments of size 1) ⇒ PRISM ≡ exact attention
+  4. partition-aware mask ≡ global causal mask restricted to the partition
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attention import prism_attention, exact_attention
+from repro.core.masks import visibility, exact_cols
+from repro.core.protocol import PrismConfig, device_views, partition_bounds
+from repro.core.segment_means import duplicate_means, segment_sizes
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(deadline=None, max_examples=25)
+@given(b=st.integers(1, 2), nq=st.integers(1, 8), nloc=st.integers(1, 8),
+       L=st.integers(1, 4), hq=st.sampled_from([1, 2, 4]),
+       grp=st.sampled_from([1, 2]), seed=st.integers(0, 10**6))
+def test_scaling_softmax_equals_duplicated(b, nq, nloc, L, hq, grp, seed):
+    """Core identity: softmax_g(Q K̂ᵀ) V̂ == softmax(Q Ỹᵀ) Ṽ with Ỹ/Ṽ the
+    row-duplicated K/V (exponentiation associativity, Eq. 12)."""
+    hkv = max(1, hq // grp)
+    hq = hkv * grp
+    hd = 4
+    n_dup = 3 * L                      # duplicate each mean 3x
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, nq, hq, hd))
+    k_loc = jax.random.normal(ks[1], (b, nloc, hkv, hd))
+    v_loc = jax.random.normal(ks[2], (b, nloc, hkv, hd))
+    kz = jax.random.normal(ks[3], (b, L, hkv, hd))
+    vz = jax.random.normal(jax.random.split(ks[3])[0], (b, L, hkv, hd))
+
+    # compressed path: g = [1]*nloc + [3]*L
+    k_hat = jnp.concatenate([k_loc, kz], axis=1)
+    v_hat = jnp.concatenate([v_loc, vz], axis=1)
+    g = jnp.concatenate([jnp.ones(nloc), jnp.full((L,), 3.0)])
+    out_c = prism_attention(q, k_hat, v_hat, g=g)
+
+    # duplicated path: repeat each mean row 3x, plain softmax
+    k_dup = jnp.concatenate([k_loc, jnp.repeat(kz, 3, axis=1)], axis=1)
+    v_dup = jnp.concatenate([v_loc, jnp.repeat(vz, 3, axis=1)], axis=1)
+    out_d = exact_attention(q, k_dup, v_dup)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_d),
+                               atol=2e-5)
+
+
+def test_permutation_invariance():
+    """Eq. 5: softmax(Q (Kᵀ P)) (P⁻¹ V) == softmax(Q Kᵀ) V."""
+    q, k, v = rand(0, 2, 5, 4, 8), rand(1, 2, 7, 2, 8), rand(2, 2, 7, 2, 8)
+    perm = np.random.default_rng(0).permutation(7)
+    out = exact_attention(q, k, v)
+    out_p = exact_attention(q, k[:, perm], v[:, perm])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p),
+                               atol=2e-5)
+    # with per-column g, permuting g alongside preserves the result
+    g = jnp.asarray([1.0, 2, 3, 1, 4, 1, 2])
+    out_g = prism_attention(q, k, v, g=g)
+    out_gp = prism_attention(q, k[:, perm], v[:, perm], g=g[perm])
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_gp),
+                               atol=2e-5)
+
+
+def test_cr1_degenerates_to_exact():
+    """CR=1 ⇒ L=N_p (segments of size 1) ⇒ means are the tokens
+    themselves ⇒ PRISM attention == full causal attention on each
+    device's rows (up to the K/V permutation, which Eq. 5 makes free)."""
+    b, n, d, h, hd = 1, 12, 16, 2, 8
+    x = rand(3, b, n, d)
+    wq, wk, wv = rand(10, d, h * hd), rand(11, d, h * hd), rand(12, d, h * hd)
+
+    def proj(t, w):
+        return (t @ w).reshape(*t.shape[:-1], h, hd)
+
+    lo, hi = exact_cols(n)
+    full_mask = visibility(jnp.arange(n), jnp.asarray(lo), jnp.asarray(hi),
+                           causal=True)
+    full = exact_attention(proj(x, wq), proj(x, wk), proj(x, wv),
+                           mask=full_mask)
+    cfg = PrismConfig(P=3, L=4, causal=True)   # N_p = 4 = L -> lossless
+    for dv in device_views(x, cfg):
+        out = prism_attention(
+            proj(dv.x_p, wq), proj(dv.x_hat, wk), proj(dv.x_hat, wv),
+            g=jnp.asarray(dv.g, jnp.float32), mask=dv.mask(cfg))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(full[:, dv.row_pos]), atol=2e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(4, 32), p=st.integers(2, 4),
+       prefix=st.integers(0, 6))
+def test_partition_mask_matches_global(n, p, prefix):
+    """Eq. 17: each device's mask over exact columns == the global causal
+    mask restricted to the partition's rows."""
+    full = np.asarray(visibility(
+        jnp.arange(n), *map(jnp.asarray, exact_cols(n)),
+        causal=True, prefix_len=prefix))
+    for start, size in partition_bounds(n, p):
+        rows = jnp.arange(size) + start
+        lo, hi = exact_cols(n)
+        m = np.asarray(visibility(rows, jnp.asarray(lo), jnp.asarray(hi),
+                                  causal=True, prefix_len=prefix))
+        np.testing.assert_array_equal(m, full[start:start + size])
+
+
+def test_mask_means_columns_fig3c():
+    """Fig. 3c: means of strictly-preceding partitions fully visible,
+    following partitions fully masked, own partition exact triangular."""
+    n, p, L = 12, 3, 2
+    x = rand(4, 1, n, 8)
+    cfg = PrismConfig(P=p, L=L, causal=True)
+    views = device_views(x, cfg)
+    v1 = views[1]                       # middle device, rows 4..7
+    m = np.asarray(v1.mask(cfg))
+    n_p = n // p
+    # local block lower-triangular
+    np.testing.assert_array_equal(m[:, :n_p], np.tril(np.ones((4, 4))) > 0)
+    # preceding partition's means (cols n_p..n_p+L-1): visible
+    assert m[:, n_p:n_p + L].all()
+    # following partition's means: masked
+    assert not m[:, n_p + L:].any()
+
+
+def test_window_mask():
+    vis = np.asarray(visibility(
+        jnp.arange(8), *map(jnp.asarray, exact_cols(8)),
+        causal=True, window=3))
+    for i in range(8):
+        for j in range(8):
+            assert vis[i, j] == (j <= i and j > i - 3)
+
+
+@settings(deadline=None, max_examples=15)
+@given(nq=st.integers(1, 16), m=st.integers(3, 64),
+       block=st.sampled_from([4, 8, 16]), causal=st.booleans(),
+       seed=st.integers(0, 10**6))
+def test_streamed_attention_matches_dense(nq, m, block, causal, seed):
+    """§Perf H3: the flash-style streamed path must equal the dense
+    scaling softmax for any block size, mask, and g."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (2, nq, 4, 8))
+    k = jax.random.normal(ks[1], (2, m, 2, 8))
+    v = jax.random.normal(ks[2], (2, m, 2, 8))
+    g = jnp.asarray(
+        np.random.default_rng(seed).integers(0, 5, size=m), jnp.float32)
+    row = jnp.arange(nq) + (m - nq)
+    lo, hi = exact_cols(m)
+    mask = visibility(row, jnp.asarray(lo), jnp.asarray(hi), causal=causal)
+    dense_out = prism_attention(q, k, v, g=g, mask=mask)
+    stream_out = prism_attention(q, k, v, g=g, mask=mask, block=block)
+    np.testing.assert_allclose(np.asarray(stream_out),
+                               np.asarray(dense_out), atol=3e-5, rtol=3e-4)
+
+
+def test_fully_masked_rows_are_zero_not_nan():
+    q, k, v = rand(0, 1, 2, 1, 4), rand(1, 1, 3, 1, 4), rand(2, 1, 3, 1, 4)
+    mask = jnp.zeros((2, 3), bool)
+    out = prism_attention(q, k, v, mask=mask)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)

@@ -1,0 +1,138 @@
+"""Pallas kernel validation: interpret-mode execution vs the pure-jnp
+oracle (ref.py), sweeping shapes / dtypes / GQA groups / mask variants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.protocol import PrismConfig, device_views
+from repro.core.segment_means import segment_means
+from repro.kernels.ops import prism_attention_op
+from repro.kernels.ref import prism_attention_reference
+from repro.kernels.segment_means import segment_means_op
+from repro.kernels.prism_attention import NEG
+
+
+def make_case(b, nq, m_loc, L, hq, hkv, hd, *, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = (jax.random.normal(ks[0], (b, nq, hq, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, m_loc + L, hkv, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, m_loc + L, hkv, hd)) * 0.5).astype(dtype)
+    # columns: m_loc exact local (positions 0..m_loc-1 == query rows),
+    # then L means each covering 4 positions of a remote partition ahead.
+    g = np.concatenate([np.ones(m_loc), np.full(L, 4.0)]).astype(np.float32)
+    lo = np.concatenate([np.arange(m_loc),
+                         m_loc + 4 * np.arange(L)]).astype(np.int32)
+    hi = np.concatenate([np.arange(m_loc),
+                         m_loc + 4 * np.arange(L) + 3]).astype(np.int32)
+    row = np.arange(nq, dtype=np.int32) + (m_loc - nq)
+    return q, k, v, jnp.asarray(g), jnp.asarray(lo), jnp.asarray(hi), \
+        jnp.asarray(row)
+
+
+@pytest.mark.parametrize("b,nq,m_loc,L,hq,hkv,hd", [
+    (1, 8, 8, 4, 1, 1, 16),
+    (2, 16, 16, 8, 4, 2, 32),
+    (1, 128, 128, 16, 4, 1, 64),      # block-aligned
+    (1, 100, 90, 7, 2, 2, 64),        # ragged -> padding path
+    (2, 8, 8, 2, 8, 1, 128),          # MQA, wide heads
+    (1, 17, 33, 5, 6, 3, 32),         # odd everything
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_kernel_vs_ref_shapes(b, nq, m_loc, L, hq, hkv, hd, causal):
+    q, k, v, g, lo, hi, row = make_case(b, nq, m_loc, L, hq, hkv, hd)
+    got = prism_attention_op(q, k, v, g, lo, hi, row, causal=causal,
+                             interpret=True)
+    log_g = jnp.where(g > 0, jnp.log(g), NEG)
+    want = prism_attention_reference(q, k, v, log_g, lo, hi, row,
+                                     causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 2e-2)])
+def test_kernel_dtypes(dtype, atol):
+    q, k, v, g, lo, hi, row = make_case(1, 32, 32, 8, 4, 2, 64, dtype=dtype)
+    got = prism_attention_op(q, k, v, g, lo, hi, row, causal=True,
+                             interpret=True)
+    log_g = jnp.where(g > 0, jnp.log(g), NEG)
+    want = prism_attention_reference(q, k, v, log_g, lo, hi, row,
+                                     causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=1e-2)
+
+
+def test_kernel_window_and_prefix():
+    q, k, v, g, lo, hi, row = make_case(1, 32, 32, 4, 2, 1, 32)
+    for kw in (dict(window=8), dict(prefix_len=6),
+               dict(window=16, prefix_len=4)):
+        got = prism_attention_op(q, k, v, g, lo, hi, row, causal=True,
+                                 interpret=True, **kw)
+        log_g = jnp.where(g > 0, jnp.log(g), NEG)
+        want = prism_attention_reference(q, k, v, log_g, lo, hi, row,
+                                         causal=True, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-4)
+
+
+def test_kernel_g_zero_padding_columns():
+    """g=0 columns (own-shard means / ragged pad) get zero weight."""
+    q, k, v, g, lo, hi, row = make_case(1, 16, 16, 4, 2, 2, 32)
+    g0 = g.at[-2:].set(0.0)
+    got = prism_attention_op(q, k, v, g0, lo, hi, row, causal=False,
+                             interpret=True)
+    want = prism_attention_op(q, k[:, :-2], v[:, :-2], g[:-2], lo[:-2],
+                              hi[:-2], row, causal=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_kernel_matches_protocol_view():
+    """End-to-end: a device_views() view run through the Pallas kernel
+    equals the jnp protocol attention (the system-level oracle)."""
+    from repro.core.attention import prism_attention
+    n, d, h, hd = 24, 16, 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, n, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, h * hd)) * 0.3
+    cfg = PrismConfig(P=3, L=2, causal=True)
+    for dv in device_views(x, cfg):
+        def proj(t):
+            return (t @ w).reshape(*t.shape[:-1], h, hd)
+        q, kk, vv = proj(dv.x_p), proj(dv.x_hat), proj(dv.x_hat)
+        want = prism_attention(q, kk, vv,
+                               g=jnp.asarray(dv.g, jnp.float32),
+                               mask=dv.mask(cfg))
+        got = prism_attention_op(
+            q, kk, vv, jnp.asarray(dv.g, jnp.float32),
+            jnp.asarray(dv.col_lo, jnp.int32),
+            jnp.asarray(dv.col_hi, jnp.int32),
+            jnp.asarray(dv.row_pos, jnp.int32),
+            causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------
+# segment-means kernel
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,n,L,d", [(1, 16, 4, 8), (2, 128, 16, 512),
+                                     (1, 64, 1, 128), (3, 32, 32, 16)])
+def test_segment_means_kernel(b, n, L, d):
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, n, d))
+    got = segment_means_op(x, L=L, block_d=min(512, d), interpret=True)
+    want = segment_means(x, L)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_segment_means_kernel_dtype(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 64)).astype(dtype)
+    got = segment_means_op(x, L=8, block_d=64, interpret=True)
+    want = segment_means(x, 8)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)

@@ -1,0 +1,192 @@
+"""Model substrate tests: MoE dispatch, SSM chunked-scan oracle,
+layer primitives, stacked-layout round trip."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.context import FullContext
+from repro.models.layers import rope, norm, norm_init, mlp, mlp_init
+from repro.models.moe import (capacity, dispatch_indices, moe_init,
+                              moe_apply, route)
+from repro.models.ssm import chunked_linear_attention
+
+
+class _Ident:
+    def state_handoff(self, la, u):
+        return jnp.zeros_like(u)
+
+    def last_shard(self, x):
+        return x
+
+
+def naive_linear_recurrence(q, k, v, log_f, gate_i, normalize):
+    """O(N²)-free scalar oracle: S_t = f_t S_{t-1} + i_t k_t v_tᵀ."""
+    b, n, h, dk = q.shape
+    dv = v.shape[-1]
+    if normalize:
+        v = np.concatenate([v, np.ones((*v.shape[:-1], 1), v.dtype)], -1)
+        dv += 1
+    s = np.zeros((b, h, dk, dv))
+    ys = []
+    for t in range(n):
+        f = np.exp(log_f[:, t])[..., None, None]
+        kv = np.einsum("bhd,bhv->bhdv", k[:, t], v[:, t]) \
+            * gate_i[:, t][..., None, None]
+        s = f * s + kv
+        ys.append(np.einsum("bhd,bhdv->bhv", q[:, t], s))
+    y = np.stack(ys, 1)
+    if normalize:
+        y, nrm = y[..., :-1], y[..., -1:]
+        y = y / np.maximum(np.abs(nrm), 1.0)
+    return y
+
+
+@settings(deadline=None, max_examples=15)
+@given(n=st.sampled_from([4, 8, 16]), chunk=st.sampled_from([2, 4, 8, 16]),
+       normalize=st.booleans(), seed=st.integers(0, 10**6))
+def test_chunked_linear_attention_vs_naive(n, chunk, normalize, seed):
+    if chunk > n:
+        chunk = n
+    b, h, dk, dv = 2, 2, 4, 4
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(b, n, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, n, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, n, h, dv)).astype(np.float32)
+    log_f = -np.abs(rng.normal(size=(b, n, h))).astype(np.float32)
+    gi = rng.uniform(0.1, 1.0, size=(b, n, h)).astype(np.float32)
+    got = chunked_linear_attention(
+        *map(jnp.asarray, (q, k, v, log_f, gi)),
+        chunk=chunk, ctx=_Ident(), normalize=normalize)
+    want = naive_linear_recurrence(q, k, v, log_f, gi, normalize)
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-4, rtol=2e-3)
+
+
+def test_chunked_final_state_matches_naive():
+    b, n, h, dk, dv = 1, 12, 2, 3, 5
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(b, n, h, dk)).astype(np.float32)
+    k = rng.normal(size=(b, n, h, dk)).astype(np.float32)
+    v = rng.normal(size=(b, n, h, dv)).astype(np.float32)
+    log_f = -np.abs(rng.normal(size=(b, n, h))).astype(np.float32)
+    gi = rng.uniform(0.1, 1.0, size=(b, n, h)).astype(np.float32)
+    _, state = chunked_linear_attention(
+        *map(jnp.asarray, (q, k, v, log_f, gi)),
+        chunk=4, ctx=_Ident(), normalize=False, return_state=True)
+    s = np.zeros((b, h, dk, dv))
+    for t in range(n):
+        s = np.exp(log_f[:, t])[..., None, None] * s + \
+            np.einsum("bhd,bhv->bhdv", k[:, t], v[:, t]) \
+            * gi[:, t][..., None, None]
+    np.testing.assert_allclose(np.asarray(state), s, atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(t=st.integers(1, 64), k=st.integers(1, 4), e=st.sampled_from([4, 8]),
+       seed=st.integers(0, 10**6))
+def test_dispatch_indices_properties(t, k, e, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, e, size=(t, k)))
+    cap = capacity(t, k, e, 1.0)
+    flat_e, slot, keep, token = map(np.asarray,
+                                    dispatch_indices(idx, e, cap))
+    # kept slots are unique per expert and < cap
+    for ee in range(e):
+        slots = slot[(flat_e == ee) & keep]
+        assert len(set(slots.tolist())) == len(slots)
+        assert (slots < cap).all()
+    # tokens kept in FIFO order: a dropped token never precedes a kept one
+    for ee in range(e):
+        ranks = slot[flat_e == ee]
+        kept = keep[flat_e == ee]
+        assert (ranks[kept] < cap).all()
+
+
+def test_moe_matches_dense_when_all_kept():
+    """With capacity_factor high enough that nothing drops and top_k = E,
+    the MoE output equals the softmax-weighted sum of all experts."""
+    d, e, dff = 8, 4, 16
+    cfg = ModelConfig(name="t", arch_type="moe", n_layers=1, d_model=d,
+                      n_heads=1, n_kv_heads=1, d_ff=dff, vocab_size=16,
+                      n_experts=e, top_k=e, expert_d_ff=dff,
+                      capacity_factor=float(e * 2), mlp_kind="gelu")
+    p = moe_init(jax.random.PRNGKey(0), d, e, dff, "gelu")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, d))
+    y, aux = moe_apply(p, x, cfg, FullContext())
+    probs, idx, _ = route(p["router"], x.reshape(-1, d), e, e)
+    want = np.zeros((6, d), np.float32)
+    xf = np.asarray(x.reshape(-1, d))
+    for t in range(6):
+        for j in range(e):
+            ee = int(idx[t, j])
+            up = np.asarray(p["experts"]["up"]["w"][ee])
+            dn = np.asarray(p["experts"]["down"]["w"][ee])
+            h = np.asarray(jax.nn.gelu(xf[t] @ up)) @ dn
+            want[t] += float(probs[t, j]) * h
+    np.testing.assert_allclose(np.asarray(y).reshape(6, d), want,
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_router_aux_loss_balanced_is_one():
+    """Perfectly uniform routing gives aux ≈ 1 (Switch normalization)."""
+    t, e = 1024, 8
+    logits_w = jnp.zeros((4, e))
+    p = {"w": logits_w}
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(t, 4)),
+                    jnp.float32) * 0.0   # uniform router
+    probs, idx, aux = route(p, x, 2, e)
+    assert abs(float(aux) - 1.0) < 0.2
+
+
+# ---------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------
+
+def test_rope_preserves_inner_products_under_shift():
+    """RoPE relative property: <R(q,i), R(k,j)> depends only on i-j."""
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    def ip(i, j):
+        qi = rope(q, jnp.asarray([i], jnp.float32))
+        kj = rope(k, jnp.asarray([j], jnp.float32))
+        return float((qi * kj).sum())
+    assert abs(ip(3, 1) - ip(10, 8)) < 1e-4
+    assert abs(ip(0, 0) - ip(7, 7)) < 1e-4
+
+
+def test_norms():
+    p = norm_init(8, "rmsnorm")
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8)) * 10
+    y = np.asarray(norm(p, x, "rmsnorm"))
+    np.testing.assert_allclose((y ** 2).mean(-1), 1.0, rtol=1e-3)
+    p2 = norm_init(8, "layernorm")
+    y2 = np.asarray(norm(p2, x, "layernorm"))
+    np.testing.assert_allclose(y2.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y2.std(-1), 1.0, rtol=1e-2)
+
+
+def test_stacked_layout_roundtrip():
+    """init stores layers stacked; iter_layers yields them in depth order
+    with the right kinds."""
+    cfg = ModelConfig(name="t", arch_type="hybrid", n_layers=7, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=8,
+                      blocks=("mamba", "mamba", "shared_attn") * 2
+                      + ("mamba",),
+                      ssm_state=4, ssm_heads=2, pos="rope")
+    u, n_units, n_tail = cfg.scan_split
+    assert (u, n_units, n_tail) == (3, 2, 1)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    kinds = [k for k, _ in T.iter_layers(cfg, params)]
+    assert kinds == list(cfg.block_kinds)
+    logits, _ = T.forward(cfg, params,
+                          jnp.zeros((1, 8), jnp.int32), chunk=4)
+    assert logits.shape == (1, 8, 8)
+    assert np.isfinite(np.asarray(logits)).all()

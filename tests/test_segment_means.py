@@ -1,0 +1,91 @@
+"""Segment Means (paper §IV-B, Alg. 2): unit + property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.segment_means import (
+    segment_means, segment_sizes, segment_bounds, duplicate_means,
+    num_landmarks, compression_rate)
+
+
+def test_sizes_basic():
+    assert segment_sizes(10, 3).tolist() == [3, 3, 4]
+    assert segment_sizes(9, 3).tolist() == [3, 3, 3]
+    assert segment_sizes(5, 1).tolist() == [5]
+    assert segment_sizes(5, 5).tolist() == [1, 1, 1, 1, 1]
+
+
+def test_sizes_invalid():
+    with pytest.raises(ValueError):
+        segment_sizes(3, 4)
+    with pytest.raises(ValueError):
+        segment_sizes(3, 0)
+
+
+def test_bounds_cover_and_offset():
+    lo, hi = segment_bounds(10, 3, offset=7)
+    assert lo.tolist() == [7, 10, 13]
+    assert hi.tolist() == [9, 12, 16]
+
+
+def test_means_exact_values():
+    x = jnp.arange(12.0).reshape(6, 2)
+    z = segment_means(x, 3)
+    np.testing.assert_allclose(
+        np.asarray(z), [[1.0, 2.0], [5.0, 6.0], [9.0, 10.0]])
+
+
+def test_means_ragged_tail():
+    x = jnp.arange(10.0)[:, None]
+    z = segment_means(x, 3)          # segments of 3,3,4
+    np.testing.assert_allclose(np.asarray(z)[:, 0], [1.0, 4.0, 7.5])
+
+
+@settings(deadline=None, max_examples=50)
+@given(n=st.integers(1, 64), l_frac=st.floats(0.01, 1.0),
+       d=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_property_means_in_convex_hull(n, l_frac, d, seed):
+    """Each segment mean lies within [min, max] of its segment — and the
+    grand mean of (size-weighted) means equals the sequence mean."""
+    L = max(1, int(n * l_frac))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    z = np.asarray(segment_means(jnp.asarray(x), L))
+    sizes = segment_sizes(n, L)
+    lo, hi = segment_bounds(n, L)
+    for i in range(L):
+        seg = x[lo[i]:hi[i] + 1]
+        assert (z[i] >= seg.min(0) - 1e-5).all()
+        assert (z[i] <= seg.max(0) + 1e-5).all()
+    weighted = (z * sizes[:, None]).sum(0) / n
+    np.testing.assert_allclose(weighted, x.mean(0), atol=1e-5)
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.integers(2, 48), L=st.integers(1, 8))
+def test_property_duplicate_restores_length(n, L):
+    if L > n:
+        L = n
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(n, 3)),
+                    jnp.float32)
+    z = segment_means(x, L)
+    y = duplicate_means(z, n)
+    assert y.shape == (n, 3)
+    # constant sequences compress losslessly
+    c = jnp.ones((n, 3))
+    np.testing.assert_allclose(
+        np.asarray(duplicate_means(segment_means(c, L), n)), 1.0)
+
+
+def test_landmarks_eq16():
+    # L = floor(N / (CR * P)) — paper Eq. 16
+    assert num_landmarks(4096, 16.0, 16) == 16
+    assert num_landmarks(197, 9.9, 2) == 9
+    assert num_landmarks(8, 100.0, 2) == 1     # clamped
+    assert compression_rate(4096, 16, 16) == 16.0
+
+
+def test_batched_shapes():
+    x = jnp.zeros((2, 3, 10, 4))
+    assert segment_means(x, 3).shape == (2, 3, 3, 4)
