@@ -1,0 +1,41 @@
+"""Docs link check: every relative markdown link must resolve to a file
+in the repo.  External (http/https/mailto) links and pure anchors are
+skipped — no network in CI.
+
+    python .github/check_doc_links.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+# exemplar/abstract dumps quote external repos verbatim — their relative
+# links point into repos we don't vendor
+SKIP = {"SNIPPETS.md", "PAPERS.md", "PAPER.md"}
+
+
+def main() -> int:
+    bad = []
+    for md in sorted(ROOT.rglob("*.md")):
+        if ".git" in md.parts or md.name in SKIP:
+            continue
+        for target in LINK.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#")[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                bad.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    for line in bad:
+        print(line)
+    print(f"checked markdown links under {ROOT.name}: "
+          f"{'FAIL' if bad else 'OK'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

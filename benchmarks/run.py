@@ -12,7 +12,8 @@ import sys
 import time
 
 SUITES = ("table4_vit", "table5_bert", "table6_gpt2", "fig5_latency",
-          "microbench", "accuracy_vs_cr", "roofline_table")
+          "microbench", "accuracy_vs_cr", "roofline_table",
+          "engine_throughput")
 
 
 def report(name: str, us_per_call: float, derived: str = ""):

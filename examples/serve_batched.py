@@ -48,7 +48,7 @@ def main():
         toks = [np.asarray(tok)]
         for g in range(gen - 1):
             logits, cache = step(params, cache, tok,
-                                 jnp.asarray(n + g, jnp.int32))
+                                 jnp.full((B,), n + g, jnp.int32))
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             toks.append(np.asarray(tok))
         outs[mode] = np.stack(toks, 1)

@@ -1,0 +1,29 @@
+"""Version shims.  The repo targets the modern ``jax.shard_map`` entry
+point (jax >= 0.6, ``check_vma=``); on the 0.4.x line shard_map lives in
+``jax.experimental.shard_map`` and the flag is spelled ``check_rep=``.
+Route every shard_map through here so the runtime runs on both."""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+except ImportError:                                    # pragma: no cover
+    _legacy_shard_map = None
+
+
+def axis_size(name):
+    """``lax.axis_size`` (jax >= 0.6); on 0.4.x, ``psum(1, name)``
+    constant-folds to the same static size inside a shard_map body."""
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)

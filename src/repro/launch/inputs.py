@@ -41,10 +41,11 @@ def prefill_input_specs(cfg: ModelConfig, shape: InputShape,
 
 
 def decode_input_specs(cfg: ModelConfig, shape: InputShape):
-    """(token, pos) — the cache SDS tree comes from serve.cache_shapes."""
+    """(token, pos) — the cache SDS tree comes from serve.cache_shapes.
+    ``pos`` is per-slot (B,): slots decode at independent depths."""
     b = shape.global_batch
     return (jax.ShapeDtypeStruct((b,), jnp.int32),
-            jax.ShapeDtypeStruct((), jnp.int32))
+            jax.ShapeDtypeStruct((b,), jnp.int32))
 
 
 def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):

@@ -1,8 +1,15 @@
-"""Serving launcher: prefill a batch of prompts, then decode greedily.
+"""Serving launcher: static batch (prefill + greedy decode) or the
+continuous-batching engine on a synthetic Poisson arrival trace.
 
+    # static batch
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small \
         --reduced --batch 8 --prompt-len 64 --gen 16 --mesh 2x4 \
         --decode-mode exact
+
+    # request-level engine, Poisson arrivals
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small \
+        --reduced --engine --requests 32 --rate 4 --batch 8 \
+        --prompt-len 64 --gen 16 --mesh 2x4
 """
 from __future__ import annotations
 
@@ -16,7 +23,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-small")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="static batch size / engine slot count")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--mesh", default="2x4")
@@ -24,6 +32,16 @@ def main():
                     choices=("exact", "prism"))
     ap.add_argument("--cr", type=float, default=4.0)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine over a Poisson trace")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="[engine] number of requests in the trace")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="[engine] Poisson arrival rate, requests/s")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--gang", action="store_true",
+                    help="[engine] static-batching admission (baseline)")
     args = ap.parse_args()
 
     import jax
@@ -47,13 +65,38 @@ def main():
         params = restore_checkpoint(args.checkpoint, step_n, params)
         print(f"[serve] restored step {step_n}")
 
-    n_seq = model
+    from repro.runtime.serve import seq_shards
+    n_seq = seq_shards(mesh, args.batch)
     n = args.prompt_len - args.prompt_len % n_seq
     cap = n + args.gen + (-(n + args.gen)) % n_seq
     hp = ServeHParams(decode_mode=args.decode_mode, means_cr=args.cr)
     prism = PrismConfig(
         P=model, cr=args.cr,
         mode="prism" if args.decode_mode == "prism" else "voltage")
+
+    if args.engine:
+        from repro.serving import SamplingParams, ServingEngine
+        eng = ServingEngine(cfg, mesh, params, n_slots=args.batch,
+                            prefill_len=n, max_cache=cap, hp=hp,
+                            prism=prism, gang=args.gang)
+        rng = np.random.default_rng(0)
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                             size=args.requests))
+        for i in range(args.requests):
+            plen = int(rng.integers(max(1, n // 2), n + 1))
+            prompt = rng.integers(1, cfg.vocab_size, size=plen)
+            eng.submit(prompt, max_new_tokens=args.gen,
+                       sampling=SamplingParams(temperature=args.temperature,
+                                               top_k=args.top_k, seed=i),
+                       arrival=float(arrivals[i]))
+        mode = "gang (static)" if args.gang else "continuous"
+        print(f"[engine] {args.requests} requests, Poisson rate "
+              f"{args.rate}/s, {args.batch} slots, {mode} admission")
+        eng.run()
+        for k, v in eng.stats.summary().items():
+            print(f"[engine] {k:22s} {v:.3f}"
+                  if isinstance(v, float) else f"[engine] {k:22s} {v}")
+        return
 
     prompts = np.random.default_rng(0).integers(
         1, cfg.vocab_size, size=(args.batch, n)).astype(np.int32)
@@ -74,7 +117,7 @@ def main():
     out = [np.asarray(tok)]
     t0 = time.time()
     for g in range(args.gen - 1):
-        pos = jnp.asarray(n + g, jnp.int32)
+        pos = jnp.full((args.batch,), n + g, jnp.int32)
         logits, cache = step(params, cache, tok, pos)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out.append(np.asarray(tok))

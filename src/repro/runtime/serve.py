@@ -33,6 +33,12 @@ Cache layout (per layer, by block kind):
 SSM/hybrid decode is attention-free: O(1) state per token — the reason
 long_500k runs natively for xlstm/zamba2; dense archs earn it through the
 PRISM-compressed (or sliding-window) cache.
+
+Continuous batching: ``pos`` is a (B,) vector — each batch row (decode
+*slot*) carries its own position, idle slots pass -1, and all cache
+writes are owner-masked per row.  ``insert_cache_row`` splices a newly
+prefilled request into a free slot mid-flight; ``repro.serving`` builds
+the request-level engine on top of these primitives.
 """
 from __future__ import annotations
 
@@ -45,6 +51,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import axis_size, shard_map
 from ..core.attention import _gqa_logits, _gqa_output, prism_attention
 from ..core.masks import NEG_INF
 from ..core.protocol import PrismConfig
@@ -99,17 +106,33 @@ class ServeLayout:
         return self.prefill_len // self.n_seq
 
 
-def make_layout(cfg: ModelConfig, mesh, batch: int, cap: int,
-                hp: ServeHParams, prefill_len: int | None = None
-                ) -> ServeLayout:
+def _layout_axes(mesh, batch: int) -> tuple:
+    """(batch axes, sequence axes) the layout will use: 'model' shards
+    the sequence when the batch divides over the batch axes; otherwise
+    (long_500k: B=1) batch is replicated and the sequence shards over
+    every axis.  The single source of the rule — launchers round their
+    prompt/cap lengths via ``seq_shards`` below."""
     axes = mesh_axes(mesh)
     ba = batch_axes(mesh)
     nb = int(np.prod([axes[a] for a in ba]))
     if batch % nb == 0:
-        seq = ("model",)
-    else:                             # long_500k: B=1 — replicate batch,
-        ba = ()                       # shard sequence over every axis
-        seq = tuple(mesh.axis_names)
+        return ba, ("model",)
+    return (), tuple(mesh.axis_names)
+
+
+def seq_shards(mesh, batch: int) -> int:
+    """Sequence-shard count ``make_layout`` will pick for this
+    (mesh, batch) — prompt/cap lengths must be multiples of it."""
+    axes = mesh_axes(mesh)
+    _, seq = _layout_axes(mesh, batch)
+    return int(np.prod([axes[a] for a in seq]))
+
+
+def make_layout(cfg: ModelConfig, mesh, batch: int, cap: int,
+                hp: ServeHParams, prefill_len: int | None = None
+                ) -> ServeLayout:
+    axes = mesh_axes(mesh)
+    ba, seq = _layout_axes(mesh, batch)
     n_seq = int(np.prod([axes[a] for a in seq]))
     n0 = cap if prefill_len is None else prefill_len
     assert cap % n_seq == 0 and n0 % n_seq == 0 and n0 <= cap, (cap, n0, n_seq)
@@ -145,6 +168,43 @@ def grow_cache(cache, lay_from: ServeLayout, lay_to: ServeLayout):
         return out
     return {"scan": [fix(c) for c in cache["scan"]],
             "tail": [fix(c) for c in cache["tail"]]}
+
+
+def insert_cache_row(dst, src, src_row, dst_row):
+    """Copy batch row ``src_row`` of cache ``src`` into row ``dst_row``
+    of ``dst`` — a batch-dim ``dynamic_update_slice`` on every leaf
+    (k/v, means-KV, SSM states, conv tails all carry a leading batch
+    dim).  This is how the serving engine splices a freshly prefilled
+    request into a free decode slot mid-flight.  Both caches must share
+    a layout (``grow_cache`` a prefill cache to the decode capacity
+    first).  Pass the row indices as arrays and jit with
+    ``donate_argnums=(0,)`` so the hot loop compiles once.
+
+    Stacked 'scan' leaves are (n_units, B, ...) — batch axis 1; 'tail'
+    leaves are (B, ...) — batch axis 0."""
+    def splice(d, s, batch_axis):
+        row = lax.dynamic_slice_in_dim(s, src_row, 1, axis=batch_axis)
+        return lax.dynamic_update_slice_in_dim(
+            d, row.astype(d.dtype), dst_row, axis=batch_axis)
+
+    return {"scan": [jax.tree.map(lambda d, s: splice(d, s, 1), dc, sc)
+                     for dc, sc in zip(dst["scan"], src["scan"])],
+            "tail": [jax.tree.map(lambda d, s: splice(d, s, 0), dc, sc)
+                     for dc, sc in zip(dst["tail"], src["tail"])]}
+
+
+def reset_cache_row(cache, row):
+    """Zero one batch row of the decode cache (slot hygiene after
+    eviction; optional — an insert overwrites the row wholesale)."""
+    def one_tree(tree, batch_axis):
+        def fix(c):
+            sh = list(c.shape)
+            sh[batch_axis] = 1
+            return lax.dynamic_update_slice_in_dim(
+                c, jnp.zeros(sh, c.dtype), row, axis=batch_axis)
+        return jax.tree.map(fix, tree)
+    return {"scan": [one_tree(t, 1) for t in cache["scan"]],
+            "tail": [one_tree(t, 0) for t in cache["tail"]]}
 
 
 # --------------------------------------------------------------------------
@@ -243,19 +303,30 @@ def init_cache(cfg: ModelConfig, lay: ServeLayout, batch: int,
 # --------------------------------------------------------------------------
 
 def _write_slot(cache_kv, new_row, slot, owner):
-    """Write (B,1,Hkv,hd) into the cache at a shard-local slot if owner."""
-    clamped = jnp.clip(slot, 0, cache_kv.shape[1] - 1)
-    upd = lax.dynamic_update_slice_in_dim(
-        cache_kv, new_row.astype(cache_kv.dtype), clamped, axis=1)
-    return jnp.where(owner, upd, cache_kv)
+    """Write (B,1,Hkv,hd) rows into per-request cache slots.
+
+    ``slot`` and ``owner`` are (B,) — every batch row carries its own
+    decode depth, so a continuous-batching engine can hold requests at
+    different positions in the same cache.  Rows whose ``owner`` is
+    False (wrong shard, or idle slot with pos < 0) get their current
+    column written back unchanged — an O(B) scatter, not a full-cache
+    select, so the write cost stays independent of the cache capacity.
+    """
+    rows = jnp.arange(cache_kv.shape[0])
+    cols = jnp.clip(slot, 0, cache_kv.shape[1] - 1)
+    cur = cache_kv[rows, cols]                            # (B, Hkv, hd)
+    upd = jnp.where(owner[:, None, None],
+                    new_row[:, 0].astype(cache_kv.dtype), cur)
+    return cache_kv.at[rows, cols].set(upd)
 
 
 def flash_decode_combine(q, k, v, valid, axes, scale):
     """Exact distributed flash-decoding.  q (B,1,Hq,hd); k,v are LOCAL
-    cache shards (B,M,Hkv,hd); ``valid`` (M,) bool.  Combines partial
-    softmax stats over ``axes`` — O(B·Hq·hd) traffic, independent of N."""
+    cache shards (B,M,Hkv,hd); ``valid`` (B,M) bool (per-request column
+    visibility).  Combines partial softmax stats over ``axes`` —
+    O(B·Hq·hd) traffic, independent of N."""
     s = _gqa_logits(q, k, scale)                          # (B,Hq,1,M)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m_p = jnp.max(s, axis=-1, keepdims=True)              # (B,Hq,1,1)
     e = jnp.exp(s - m_p)
     l_p = jnp.sum(e, axis=-1, keepdims=True)              # (B,Hq,1,1)
@@ -275,19 +346,22 @@ def prism_decode_attention(q, k_loc, v_loc, kz, vz, valid, gz, owner,
                            axes, scale):
     """Paper-faithful decode: exact local columns (g=1 where valid) plus
     remote Segment-Means columns (g = segment sizes; 0 for own shard),
-    scaling-aware softmax, owner's view selected via masked psum."""
+    scaling-aware softmax, owner's view selected via masked psum.
+    ``valid`` (B,M_loc), ``gz`` (B,m) and ``owner`` (B,) are per-request
+    — slots decode at independent depths."""
     k_all = jnp.concatenate([k_loc, kz.astype(k_loc.dtype)], axis=1)
     v_all = jnp.concatenate([v_loc, vz.astype(v_loc.dtype)], axis=1)
-    g = jnp.concatenate([valid.astype(jnp.float32), gz])
+    g = jnp.concatenate([valid.astype(jnp.float32), gz], axis=1)
     s = _gqa_logits(q, k_all, scale)                      # (B,Hq,1,M)
     log_g = jnp.where(g > 0, jnp.log(jnp.maximum(g, 1e-30)), NEG_INF)
-    s = s + log_g[None, None, None, :]
+    s = s + log_g[:, None, None, :]
     s = s - jnp.max(s, axis=-1, keepdims=True)
     e = jnp.exp(s)
     w = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
     out = _gqa_output(w.astype(v_all.dtype), v_all)       # (B,1,Hq,hd)
     if axes:
-        out = lax.psum(jnp.where(owner, out, jnp.zeros_like(out)), axes)
+        sel = owner[:, None, None, None]
+        out = lax.psum(jnp.where(sel, out, jnp.zeros_like(out)), axes)
     return out
 
 
@@ -298,7 +372,7 @@ def prism_decode_attention(q, k_loc, v_loc, kz, vz, valid, gz, owner,
 def _seq_index(seq_axes):
     idx = lax.axis_index(seq_axes[0])
     for a in seq_axes[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * axis_size(a) + lax.axis_index(a)
     return idx
 
 
@@ -317,8 +391,11 @@ def _means_meta(lay: ServeLayout):
 
 
 def _decode_cols(lay: ServeLayout, idx, pos):
-    """(write_slot, owner, col_pos (cap_l,)) under the prefill-aligned
-    placement (see ServeLayout)."""
+    """(write_slot (B,), owner (B,), col_pos (cap_l,)) under the
+    prefill-aligned placement (see ServeLayout).  ``pos`` is the (B,)
+    per-request position vector; idle slots pass pos = -1, which lands
+    owner = False on every shard (no write).  ``col_pos`` maps shard
+    slots to global positions and is position-independent."""
     n0, n_loc0 = lay.prefill_len, lay.n_loc0
     extra = pos - n0
     slot = jnp.where(extra >= 0,
@@ -338,25 +415,25 @@ def _decode_cols(lay: ServeLayout, idx, pos):
 
 def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
                 lay: ServeLayout, hp: ServeHParams, *, local: bool):
-    """x (B,1,D) replicated over seq axes -> (out (B,1,D), new layer cache)."""
+    """x (B,1,D) replicated over seq axes, pos (B,) per-request positions
+    (-1 = idle slot) -> (out (B,1,D), new layer cache)."""
     xn = norm(p["ln1"], x, cfg.norm_kind)
-    rp = jnp.reshape(pos, (1,))
+    rp = pos[:, None]                          # (B,1) row positions
     q = attn_project_q(p["attn"], spec, xn, rp)
     k_new, v_new = attn_project_kv(p["attn"], spec, xn, rp)
     scale = spec.head_dim ** -0.5
 
     if local:                                  # ring window cache, replicated
         w = c["k"].shape[1]
-        slot = pos % w
-        k_c = lax.dynamic_update_slice_in_dim(
-            c["k"], k_new.astype(c["k"].dtype), slot, axis=1)
-        v_c = lax.dynamic_update_slice_in_dim(
-            c["v"], v_new.astype(c["v"].dtype), slot, axis=1)
+        alive = pos >= 0
+        k_c = _write_slot(c["k"], k_new, pos % w, alive)
+        v_c = _write_slot(c["v"], v_new, pos % w, alive)
         j = jnp.arange(w)
-        col_pos = pos - ((pos - j) % w)        # ring slot -> global position
+        # ring slot -> global position, per request
+        col_pos = pos[:, None] - ((pos[:, None] - j[None, :]) % w)
         valid = col_pos >= 0
         if spec.window:
-            valid &= col_pos > pos - spec.window
+            valid &= col_pos > pos[:, None] - spec.window
         out = flash_decode_combine(q, k_c, v_c, valid, (), scale)
         new_c = dict(c, k=k_c, v=v_c)
     else:
@@ -364,12 +441,13 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
         slot, owner, col_pos = _decode_cols(lay, idx, pos)
         k_c = _write_slot(c["k"], k_new, slot, owner)
         v_c = _write_slot(c["v"], v_new, slot, owner)
-        valid = col_pos <= pos
+        valid = col_pos[None, :] <= pos[:, None]
         if hp.decode_mode == "prism" and "kz" in c:
             _, hi, _, sizes, shard_of = _means_meta(lay)
             gz = jnp.where(
-                (jnp.asarray(shard_of) != idx) & (jnp.asarray(hi) <= pos),
-                jnp.asarray(sizes), 0.0)
+                (jnp.asarray(shard_of)[None, :] != idx)
+                & (jnp.asarray(hi)[None, :] <= pos[:, None]),
+                jnp.asarray(sizes)[None, :], 0.0)
             out = prism_decode_attention(
                 q, k_c, v_c, c["kz"], c["vz"], valid, gz,
                 owner, lay.seq_axes, scale)
@@ -405,9 +483,9 @@ def attn_decode_tp(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
     per-layer FSDP gather (the whole weight matrix per token) becomes
     one activation psum.
     """
-    tp = lax.axis_size("model")
+    tp = axis_size("model")
     xn = norm(p["ln1"], x, cfg.norm_kind)
-    rp = jnp.reshape(pos, (1,))
+    rp = pos[:, None]                          # (B,1) row positions
     b = x.shape[0]
 
     if attn_tp:
@@ -429,7 +507,7 @@ def attn_decode_tp(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
     slot, owner, col_pos = _decode_cols(lay, idx, pos)
     k_c = _write_slot(c["k"], k_new, slot, owner)
     v_c = _write_slot(c["v"], v_new, slot, owner)
-    valid = col_pos <= pos
+    valid = col_pos[None, :] <= pos[:, None]
     out = flash_decode_combine(q, k_c, v_c, valid, lay.seq_axes, scale)
     new_c = dict(c, k=k_c, v=v_c)
 
@@ -468,7 +546,7 @@ class DecodeMoeCtx:
         def undo(y):
             if self.tp:
                 d = lax.axis_index("data")
-                s = y.shape[1] // lax.axis_size("data")
+                s = y.shape[1] // axis_size("data")
                 y = lax.dynamic_slice_in_dim(y, d * s, s, axis=1)
             return lax.all_to_all(y, "model", split_axis=1, concat_axis=0,
                                   tiled=True)
@@ -545,7 +623,9 @@ def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
 
 def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
                 sharded_vocab):
-    """token (B,) -> x (B,1,D), replicated over the sequence axes."""
+    """token (B,), pos (B,) -> x (B,1,D), replicated over the sequence
+    axes.  Positions are per request; idle slots (pos = -1) still embed
+    but never reach the cache (owner masking in the attention layers)."""
     table = params["embed"]["table"]
     if sharded_vocab:
         v_loc = table.shape[0]
@@ -562,14 +642,15 @@ def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     if cfg.pos == "learned":
         tbl = gather_tree(params["pos_embed"], rules["pos_embed"])["table"]
-        x = x + lax.dynamic_slice_in_dim(tbl, pos, 1).astype(x.dtype)
+        safe = jnp.clip(pos, 0, tbl.shape[0] - 1)
+        x = x + jnp.take(tbl, safe, axis=0)[:, None].astype(x.dtype)
     elif cfg.pos == "sincos":
         half = cfg.d_model // 2
         freq = jnp.exp(-np.log(10000.0)
                        * jnp.arange(half, dtype=jnp.float32) / half)
-        ang = pos.astype(jnp.float32) * freq
+        ang = pos.astype(jnp.float32)[:, None] * freq      # (B, half)
         x = x + jnp.concatenate(
-            [jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+            [jnp.sin(ang), jnp.cos(ang)], -1)[:, None].astype(x.dtype)
     return x
 
 
@@ -580,10 +661,14 @@ def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
 def make_serve_step(cfg: ModelConfig, mesh, params, *,
                     batch: int, cap: int, prefill_len: int | None = None,
                     hp: ServeHParams = ServeHParams()):
-    """jitted (params, cache, token (B,), pos ()) -> (logits, cache).
+    """jitted (params, cache, token (B,), pos (B,)) -> (logits, cache).
 
-    ``logits`` is (B, V) — vocab-sharded over 'model' when the embedding
-    table is (the returned lspec says which).
+    ``pos`` carries one position per batch row, so independent requests
+    can decode at different depths in the same step (continuous
+    batching).  Idle slots pass pos = -1: they compute garbage-but-
+    finite logits and never write the cache (owner masking).  ``logits``
+    is (B, V) — vocab-sharded over 'model' when the embedding table is
+    (the returned lspec says which).
     """
     lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len)
     if hp.decode_tp:
@@ -644,9 +729,9 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
         return logits, {"scan": list(new_stacks), "tail": new_tail}
 
     lspec = P(lay.bspec, "model" if vocab_sharded else None)
-    body_sm = jax.shard_map(
+    body_sm = shard_map(
         body, mesh=mesh,
-        in_specs=(pspecs, cspecs, P(lay.bspec), P()),
+        in_specs=(pspecs, cspecs, P(lay.bspec), P(lay.bspec)),
         out_specs=(lspec, cspecs),
         check_vma=False)
 
@@ -655,7 +740,7 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
         body_sm,
         in_shardings=(jax.tree.map(sh, pspecs),
                       jax.tree.map(sh, cspecs),
-                      sh(P(lay.bspec)), sh(P())),
+                      sh(P(lay.bspec)), sh(P(lay.bspec))),
         out_shardings=(sh(lspec), jax.tree.map(sh, cspecs)),
         donate_argnums=(1,),
     )
@@ -860,7 +945,7 @@ def make_prefill_step(cfg: ModelConfig, mesh, params, prism: PrismConfig,
         if cfg.arch_type == "vlm":
             bspec["embeds"] = P(lay.bspec, None, None)
     lspec = P(lay.bspec, "model" if vocab_sharded else None)
-    body_sm = jax.shard_map(
+    body_sm = shard_map(
         body, mesh=mesh,
         in_specs=(pspecs, bspec),
         out_specs=(lspec, cspecs),

@@ -1,0 +1,8 @@
+"""Request-level serving: continuous batching over the sequence-sharded
+decode runtime (docs/serving.md)."""
+from .sampling import SamplingParams, sample_token
+from .scheduler import Request, RequestState, FifoScheduler, EngineStats
+from .engine import ServingEngine
+
+__all__ = ["SamplingParams", "sample_token", "Request", "RequestState",
+           "FifoScheduler", "EngineStats", "ServingEngine"]

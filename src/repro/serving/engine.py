@@ -1,0 +1,276 @@
+"""Continuous-batching serving engine over the sequence-sharded runtime.
+
+Request lifecycle (docs/serving.md has the full tour)::
+
+    submit ──> [FIFO queue] ──> prefill (batched, right-padded to
+    prefill_len) ──> grow_cache to decode capacity ──> insert_cache_row
+    into a free slot ──> per-slot decode (pos vector; idle rows carry
+    pos = -1) ──> host-side sampling ──> evict on EOS / max-tokens ──>
+    slot freed for the next arrival, mid-flight.
+
+The engine owns exactly three compiled programs, each traced once:
+
+  * ``prefill``  — batch = n_slots, length = prefill_len.  An admission
+    *flush* packs every admitted request into one prefill call (rows
+    beyond the admitted count carry dummy pad prompts and are never
+    inserted), so admission cost amortises over bursts.
+  * ``step``     — batch = n_slots single-token decode with a (B,) pos
+    vector: every request decodes at its own depth.
+  * ``insert``   — ``insert_cache_row`` with donated destination,
+    row indices passed as arrays so slot choice never retraces.
+
+Short prompts and the admission rewind: prompts are right-padded to
+``prefill_len``.  Causality makes every *real* prompt row of the
+prefilled KV cache exact (pad columns sit strictly to the right), but
+the prefill's returned last-token logits belong to a pad column, so the
+engine discards them and instead starts the slot at
+``pos = len(prompt) - 1``, re-feeding the last real prompt token.  That
+first decode step rewrites the token's K/V row in place (the layout's
+``p = n0 - 1`` degenerate case) and yields exactly the teacher-forced
+next-token logits; pad columns beyond ``pos`` stay masked
+(``col_pos <= pos``) until real decoded tokens overwrite them.  TTFT is
+measured to the first token sampled from those logits.
+
+In ``prism`` decode mode the Segment-Means cache rows (kz/vz) are
+captured from the padded prefill, so for short prompts the remote-means
+approximation also averages pad columns — acceptable for an
+approximate mode, but prefer ``exact`` when prompts are much shorter
+than ``prefill_len``.  The engine-vs-sequential equivalence holds in
+both modes because both paths run the identical computation.
+"""
+from __future__ import annotations
+
+import functools
+import heapq
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from ..core.protocol import PrismConfig
+from ..models.config import ModelConfig
+from ..runtime.serve import (ServeHParams, cache_specs, grow_cache,
+                             init_cache, insert_cache_row,
+                             make_prefill_step, make_serve_step)
+from .sampling import SamplingParams, sample_token
+from .scheduler import EngineStats, FifoScheduler, Request
+
+
+class ServingEngine:
+    """Multiplexes independent requests through a fixed pool of decode
+    slots backed by one batched, sequence-sharded KV cache."""
+
+    def __init__(self, cfg: ModelConfig, mesh, params, *,
+                 n_slots: int, prefill_len: int, max_cache: int,
+                 hp: ServeHParams = ServeHParams(),
+                 prism: PrismConfig | None = None,
+                 decode_per_prefill: int = 4, gang: bool = False,
+                 pad_id: int = 0, clock=time.monotonic):
+        if prism is None:
+            prism = PrismConfig(
+                P=1, cr=hp.means_cr,
+                mode="prism" if hp.decode_mode == "prism" else "voltage")
+        unsupported = {k for k in cfg.block_kinds
+                       if k in ("mlstm", "slstm", "mamba", "attn_local")}
+        if unsupported:
+            # The admission scheme relies on the cache being addressed
+            # purely by global position: right-padded prefill leaves the
+            # real rows exact, and the rewind rewrite is idempotent.
+            # Recurrent SSM state consumes pad tokens (and the rewind
+            # would double-feed the last prompt token), and the ring
+            # window cache holds the padded tail, so those blocks need a
+            # state-snapshot admission path — future work.  The static
+            # serve path (repro.launch.serve without --engine) still
+            # covers these architectures.
+            raise ValueError(
+                f"ServingEngine does not support block kinds "
+                f"{sorted(unsupported)} (arch {cfg.name!r}); only "
+                "global-attention caches (attn/moe/shared_attn) admit "
+                "correctly")
+        if cfg.arch_type == "vlm" or cfg.frontend:
+            # those prefill signatures require an 'embeds' input the
+            # engine's token-only admission path never builds
+            raise ValueError(
+                f"ServingEngine serves token prompts only; arch "
+                f"{cfg.name!r} (arch_type={cfg.arch_type!r}, "
+                f"frontend={cfg.frontend!r}) needs embedding inputs")
+        self.cfg, self.mesh, self.params = cfg, mesh, params
+        self.n_slots, self.prefill_len = n_slots, prefill_len
+        self.pad_id, self._clock = pad_id, clock
+
+        # (make_prefill_step re-derives PrismConfig.P from the layout's
+        # n_seq; only the mode/cr fields of ``prism`` matter here)
+        self._prefill, lay_p, _, _ = make_prefill_step(
+            cfg, mesh, params, prism, batch=n_slots, n=prefill_len, hp=hp)
+        self._step, lay_d, _, _ = make_serve_step(
+            cfg, mesh, params, batch=n_slots, cap=max_cache,
+            prefill_len=prefill_len, hp=hp)
+        assert lay_p.n_seq == lay_d.n_seq, (lay_p, lay_d)
+        self.layout = lay_d
+        # pin the decode-layout cache sharding on every path that feeds
+        # the step function (its donated args reject resharding)
+        cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                cache_specs(cfg, lay_d, hp))
+        self._grow = jax.jit(
+            functools.partial(grow_cache, lay_from=lay_p, lay_to=lay_d),
+            out_shardings=cache_sh)
+        self._insert = jax.jit(insert_cache_row, donate_argnums=(0,),
+                               out_shardings=cache_sh)
+        self._cache = jax.device_put(init_cache(cfg, lay_d, n_slots, hp),
+                                     cache_sh)
+
+        self._sched = FifoScheduler(n_slots,
+                                    decode_per_prefill=decode_per_prefill,
+                                    gang=gang)
+        self.stats = EngineStats(n_slots=n_slots)
+        self._pending: list = []       # heap of (arrival, rid, Request)
+        self._results: dict = {}       # rid -> RequestState
+        self._next_rid = 0
+        self._t0 = None                # clock origin (first submit/run)
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def now(self) -> float:
+        if self._t0 is None:
+            self._t0 = self._clock()
+        return self._clock() - self._t0
+
+    def submit(self, prompt, *, max_new_tokens: int, eos_id=None,
+               sampling: SamplingParams = SamplingParams(),
+               arrival: float | None = None) -> int:
+        """Queue one request.  ``arrival`` (engine-relative seconds) may
+        lie in the future — the run loop holds the request back until
+        the clock passes it, which is how Poisson traces are replayed.
+        """
+        prompt = tuple(int(t) for t in prompt)
+        if not 1 <= len(prompt) <= self.prefill_len:
+            raise ValueError(
+                f"prompt length {len(prompt)} not in [1, {self.prefill_len}]")
+        if len(prompt) + max_new_tokens > self.layout.cap:
+            raise ValueError(
+                f"prompt {len(prompt)} + max_new {max_new_tokens} exceeds "
+                f"cache capacity {self.layout.cap}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+                      eos_id=eos_id, sampling=sampling,
+                      arrival=self.now() if arrival is None else arrival)
+        # always route through the arrival-ordered pending heap so a
+        # late submit with an already-past arrival cannot jump ahead of
+        # earlier arrivals still waiting to be released (FIFO by
+        # arrival time; rid breaks ties in submit order)
+        heapq.heappush(self._pending, (req.arrival, rid, req))
+        self._release_arrivals()
+        return rid
+
+    def _release_arrivals(self):
+        now = self.now()
+        while self._pending and self._pending[0][0] <= now:
+            self._sched.submit(heapq.heappop(self._pending)[2])
+        self._sched.drain = not self._pending
+
+    def next_arrival(self) -> float | None:
+        """Arrival time of the earliest not-yet-released request —
+        what an external drive loop (logical-clock benchmarks) jumps
+        the clock to when the engine reports 'idle'."""
+        return self._pending[0][0] if self._pending else None
+
+    # ------------------------------------------------------------------
+    # one engine iteration
+    # ------------------------------------------------------------------
+    def step(self) -> str:
+        """Run one scheduler decision: a prefill flush, a decode step,
+        or nothing ('idle').  Returns which."""
+        sch = self._sched
+        self._release_arrivals()
+        if self.stats.t_start is None:
+            self.stats.t_start = self.now()
+
+        if sch.want_prefill():
+            batch = np.full((self.n_slots, self.prefill_len), self.pad_id,
+                            np.int32)
+            states = sch.admit(self.now())
+            for i, st in enumerate(states):
+                batch[i, :len(st.req.prompt)] = st.req.prompt
+            _, fresh = self._prefill(self.params, {"tokens":
+                                                   jnp.asarray(batch)})
+            grown = self._grow(fresh)
+            for i, st in enumerate(states):
+                self._cache = self._insert(self._cache, grown,
+                                           jnp.asarray(i, jnp.int32),
+                                           jnp.asarray(st.slot, jnp.int32))
+            self.stats.prefills += 1
+            self.stats.t_end = self.now()
+            return "prefill"
+
+        if sch.active:
+            tok = np.zeros(self.n_slots, np.int32)
+            pos = np.full(self.n_slots, -1, np.int32)
+            for slot, st in sch.active.items():
+                tok[slot] = st.next_token
+                pos[slot] = st.pos
+            t0 = self.now()
+            logits, self._cache = self._step(
+                self.params, self._cache, jnp.asarray(tok), jnp.asarray(pos))
+            rows = np.asarray(jax.device_get(logits))
+            now = self.now()
+            self.stats.step_latency.append(now - t0)
+            self.stats.occupancy.append(len(sch.active) / self.n_slots)
+            self.stats.decode_steps += 1
+            for slot, st in list(sch.active.items()):
+                t = sample_token(rows[slot], st.req.sampling, st.rng)
+                st.generated.append(t)
+                self.stats.generated_tokens += 1
+                if st.ttft is None:
+                    st.ttft = now - st.req.arrival
+                    self.stats.ttft.append(st.ttft)
+                st.pos += 1
+                st.next_token = t
+                if st.finished():
+                    sch.evict(st, now)
+                    self._results[st.req.rid] = st
+                    self.stats.completed += 1
+            sch.note_decode()
+            self.stats.t_end = self.now()
+            return "decode"
+        return "idle"
+
+    # ------------------------------------------------------------------
+    # drive to completion
+    # ------------------------------------------------------------------
+    def run(self) -> dict:
+        """Step until every submitted request (including future
+        arrivals) has finished.  Returns {rid: [generated token ids]}."""
+        while True:
+            kind = self.step()
+            if kind != "idle":
+                continue
+            if self._pending:
+                # nothing runnable until the next arrival — wait it
+                # out.  An injected clock that doesn't tick with wall
+                # time (e.g. a logical StepClock) is fast-forwarded to
+                # the arrival instead, so run() terminates under both.
+                before = self.now()
+                dt = self.next_arrival() - before
+                if dt > 0:
+                    time.sleep(min(dt, 0.05))
+                    if self.now() <= before:
+                        self._t0 -= dt
+                continue
+            if not self._sched.has_work:
+                break
+        return self.results()
+
+    def results(self) -> dict:
+        return {rid: list(st.generated)
+                for rid, st in sorted(self._results.items())}
+
+    def request_stats(self) -> dict:
+        return {rid: {"ttft_s": st.ttft,
+                      "latency_s": (st.t_finish - st.req.arrival
+                                    if st.t_finish is not None else None),
+                      "tokens": len(st.generated)}
+                for rid, st in sorted(self._results.items())}

@@ -1,0 +1,173 @@
+"""Request-level scheduling for the continuous-batching engine.
+
+FIFO admission over a fixed pool of decode slots, with a
+prefill/decode interleave knob: once streams are decoding, at most one
+prefill *flush* (which admits up to every free slot at once) per
+``decode_per_prefill`` decode steps, so a burst of arrivals cannot
+starve running streams of decode bandwidth.  An idle engine (nothing
+decoding) always prefills immediately — there is no decode work to
+protect, and TTFT is all that matters.
+
+``gang=True`` degrades the policy to classic *static batching* — admit
+only into an empty pool, then drain it completely — which is the
+baseline the engine-throughput benchmark compares against.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .sampling import SamplingParams
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: tuple
+    max_new_tokens: int
+    eos_id: int | None = None
+    sampling: SamplingParams = SamplingParams()
+    arrival: float = 0.0             # absolute clock time of arrival
+
+
+class RequestState:
+    """Mutable per-request serving state while a request owns a slot.
+
+    The admission *rewind*: prompts are right-padded to the engine's
+    ``prefill_len``, so the prefill's last-token logits belong to a pad
+    column.  The slot therefore starts at ``pos = len(prompt) - 1`` and
+    re-feeds the final prompt token: the decode step rewrites that K/V
+    row in place (the layout's p = n0-1 degenerate case) and returns the
+    exact teacher-forced next-token logits.  Everything past ``pos`` is
+    invisible (``col_pos <= pos``) until real decoded tokens land there.
+    """
+    __slots__ = ("req", "slot", "pos", "next_token", "generated", "rng",
+                 "t_admit", "ttft", "t_finish")
+
+    def __init__(self, req: Request, slot: int, t_admit: float):
+        self.req = req
+        self.slot = slot
+        self.pos = len(req.prompt) - 1
+        self.next_token = int(req.prompt[-1])
+        self.generated: list = []
+        self.rng = req.sampling.make_rng()
+        self.t_admit = t_admit
+        self.ttft = None
+        self.t_finish = None
+
+    def finished(self) -> bool:
+        if len(self.generated) >= self.req.max_new_tokens:
+            return True
+        eos = self.req.eos_id
+        return eos is not None and self.generated and self.generated[-1] == eos
+
+
+#: ring-buffer cap on the per-step/per-request sample lists — a
+#: long-running engine must not grow host memory without bound;
+#: percentiles over the most recent window are what an operator wants
+#: anyway
+STATS_WINDOW = 65536
+
+
+@dataclass
+class EngineStats:
+    """Throughput/latency counters the engine accumulates as it runs.
+    Sample lists are bounded deques (see ``STATS_WINDOW``)."""
+    n_slots: int = 0
+    ttft: deque = field(                               # arrival -> 1st token
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    step_latency: deque = field(                       # per decode step (s)
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    occupancy: deque = field(                          # active/slots per step
+        default_factory=lambda: deque(maxlen=STATS_WINDOW))
+    prefills: int = 0
+    decode_steps: int = 0
+    completed: int = 0
+    generated_tokens: int = 0
+    t_start: float | None = None
+    t_end: float | None = None
+
+    def summary(self) -> dict:
+        span = ((self.t_end - self.t_start)
+                if self.t_start is not None and self.t_end is not None
+                else 0.0)
+        pct = (lambda xs, q: float(np.percentile(list(xs), q))
+               if xs else 0.0)
+        return {
+            "requests": self.completed,
+            "elapsed_s": span,
+            "requests_per_s": self.completed / span if span else 0.0,
+            "decode_tokens_per_s": (self.generated_tokens / span
+                                    if span else 0.0),
+            "ttft_p50_s": pct(self.ttft, 50),
+            "ttft_p90_s": pct(self.ttft, 90),
+            "ttft_max_s": max(self.ttft) if self.ttft else 0.0,
+            "step_ms_p50": 1e3 * pct(self.step_latency, 50),
+            "occupancy": (float(np.mean(self.occupancy))
+                          if self.occupancy else 0.0),
+            "prefills": self.prefills,
+            "decode_steps": self.decode_steps,
+        }
+
+
+class FifoScheduler:
+    """FIFO queue + slot pool + prefill/decode interleave policy."""
+
+    def __init__(self, n_slots: int, *, decode_per_prefill: int = 4,
+                 gang: bool = False):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self.decode_per_prefill = max(1, decode_per_prefill)
+        self.gang = gang
+        self.queue: deque = deque()
+        self.free_slots: list = list(range(n_slots))   # ascending order
+        self.active: dict = {}                         # slot -> RequestState
+        self.drain = False     # no more arrivals expected (gang flushes)
+        self._decodes_since_prefill = self.decode_per_prefill
+
+    # -- queue -------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    # -- policy ------------------------------------------------------------
+    def want_prefill(self) -> bool:
+        if not self.queue or not self.free_slots:
+            return False
+        if self.gang:
+            # static batching: only gang-admit into an EMPTY pool, and
+            # only once a full gang is queued (or no more arrivals).
+            return not self.active and (len(self.queue) >= self.n_slots
+                                        or self.drain)
+        if not self.active:
+            return True
+        return self._decodes_since_prefill >= self.decode_per_prefill
+
+    def note_decode(self):
+        self._decodes_since_prefill += 1
+
+    # -- transitions -------------------------------------------------------
+    def admit(self, now: float) -> list:
+        """Pop FIFO requests into free slots (lowest slot first) and
+        return the new RequestStates, in admission order."""
+        states = []
+        while self.queue and self.free_slots:
+            slot = self.free_slots.pop(0)
+            st = RequestState(self.queue.popleft(), slot, now)
+            self.active[slot] = st
+            states.append(st)
+        self._decodes_since_prefill = 0
+        return states
+
+    def evict(self, st: RequestState, now: float):
+        """Release a finished request's slot back to the pool."""
+        assert self.active.get(st.slot) is st
+        del self.active[st.slot]
+        st.t_finish = now
+        self.free_slots.append(st.slot)
+        self.free_slots.sort()

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size
+
 from ..core.segment_means import segment_means, segment_sizes, segment_bounds
 from ..core.protocol import PrismConfig
 from ..models.context import SeqContext, AugmentedKV
@@ -55,7 +57,7 @@ class ShardedPrismContext(SeqContext):
     def _index(self):
         idx = lax.axis_index(self.seq_axes[0])
         for a in self.seq_axes[1:]:
-            idx = idx * lax.axis_size(a) + lax.axis_index(a)
+            idx = idx * axis_size(a) + lax.axis_index(a)
         return idx
 
     def _gather(self, x):
@@ -144,7 +146,7 @@ class ShardedPrismContext(SeqContext):
         # a corrective permute on the major axis for the wrap column.
         minor = self.seq_axes[-1]
         major = self.seq_axes[0]
-        pm = lax.axis_size(minor)
+        pm = axis_size(minor)
         # shift-by-h on the flattened index decomposes into minor shift and
         # major carry; for h < pm (always true here) one carry at most.
         h = perm[0][1] - perm[0][0]
@@ -154,7 +156,7 @@ class ShardedPrismContext(SeqContext):
             x, minor, [(pm - h + i, i) for i in range(h)])
         carried = lax.ppermute(
             carried, major,
-            [(s, s + 1) for s in range(lax.axis_size(major) - 1)])
+            [(s, s + 1) for s in range(axis_size(major) - 1)])
         idx_minor = lax.axis_index(minor)
         return jnp.where(idx_minor < h, carried, shifted)
 
@@ -218,7 +220,7 @@ class ShardedPrismContext(SeqContext):
     def expert_exchange(self, buf):
         """(E, cap, D) -> (E_local, P·cap, D) via tiled all_to_all."""
         ax = self.axis
-        p = lax.axis_size(ax)
+        p = axis_size(ax)
         out = lax.all_to_all(buf, ax, split_axis=0, concat_axis=1, tiled=True)
 
         def undo(y):

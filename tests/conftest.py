@@ -6,3 +6,8 @@ import sys
 # (test_distributed.py) that set --xla_force_host_platform_device_count
 # in the child environment only.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess runners forking an 8-device host mesh")

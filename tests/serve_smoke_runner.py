@@ -51,7 +51,7 @@ def check(name, cfg, mode, *, atol, batch=8, n=32, gen=4):
 
     ok = True
     for g in range(gen):
-        pos = jnp.asarray(n + g, jnp.int32)
+        pos = jnp.full((batch,), n + g, jnp.int32)
         logits_dec, cache = step(params, cache, tokens[:, n + g], pos)
         if mode in ("exact", "tp"):
             ref_g, _ = T.forward(cfg, params, tokens[:, :n + g + 1], chunk=1)

@@ -98,6 +98,6 @@ def test_reduced_decode_step(arch):
     cache = grow_cache(cache, lay_p, lay_d)
     for g in range(gen):
         logits, cache = step(params, cache, tokens[:, n + g],
-                             jnp.asarray(n + g, jnp.int32))
+                             jnp.full((B,), n + g, jnp.int32))
         assert logits.shape == (B, cfg.vocab_size)
         assert np.isfinite(np.asarray(logits)).all()

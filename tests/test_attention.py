@@ -8,7 +8,8 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.attention import prism_attention, exact_attention
 from repro.core.masks import visibility, exact_cols

@@ -36,6 +36,13 @@ def test_sharded_serve_equivalence():
 
 
 @pytest.mark.slow
+def test_engine_continuous_batching_equivalence():
+    """6 staggered requests through a 4-slot sharded engine produce the
+    same tokens as sequential serving, in exact AND prism modes."""
+    assert run_child("engine_equiv_runner.py") == 0
+
+
+@pytest.mark.slow
 def test_roofline_collective_parser():
     """collective_bytes() parses a real compiled HLO and finds the PRISM
     all-gather; PRISM moves fewer collective bytes than Voltage on the

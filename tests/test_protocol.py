@@ -3,7 +3,7 @@ paper's communication accounting (§IV-C)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.protocol import (
     PrismConfig, partition, partition_bounds, device_views,
