@@ -1,7 +1,154 @@
 """Operator microbenchmarks (CPU wall-clock; the TPU path is validated
 structurally via the dry-run, since Pallas interpret mode is a Python
-emulator whose timing is meaningless)."""
+emulator whose timing is meaningless).
+
+``python -m benchmarks.microbench`` runs just the decode-attention
+section and writes the ``BENCH_decode.json`` artifact the CI bench
+smoke job uploads — the start of the decode-perf trajectory (see
+EXPERIMENTS.md §Perf).
+"""
 from __future__ import annotations
+
+
+def decode_attention_bench(report):
+    """The serving hot path: per-token decode attention.
+
+    Three checks, strongest first:
+
+    * concat-free structural proof — walk the jaxprs of the old prism
+      decode (`prism_decode_attention`) and the routed path
+      (`decode_attention(backend='jnp')`) and count ``concatenate``
+      ops producing cache-sized arrays: the old path allocates 3 per
+      layer per token (k, v, g), the new path MUST have 0;
+    * kernel correctness — the Pallas flash-decode kernel (interpret
+      mode, i.e. the exact code a TPU compiles) against the jnp stats
+      oracle;
+    * measured wall-clock — old vs new, jnp vs jnp.  On CPU XLA fuses
+      the concatenate into the consumer, so expect ~1x here; the
+      number exists to start the trajectory for real-accelerator runs,
+      where the per-step HBM allocation is the cost (EXPERIMENTS.md
+      §Perf).
+
+    Returns the BENCH_decode.json payload."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.decode_attention import (decode_stats_reference,
+                                                flash_decode_stats)
+    from repro.runtime.serve import decode_attention, prism_decode_attention
+    from .common import timeit
+
+    # -- structural: kernel (interpret) == jnp oracle, modest shape ----
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, m, mz, hq, hkv, hd = 2, 96, 8, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, 1, hq, hd)) * 0.5
+    k = jax.random.normal(ks[1], (b, m, hkv, hd)) * 0.5
+    v = jax.random.normal(ks[2], (b, m, hkv, hd)) * 0.5
+    kz = jax.random.normal(ks[3], (b, mz, hkv, hd)) * 0.5
+    vz = jax.random.normal(ks[4], (b, mz, hkv, hd)) * 0.5
+    pos = np.array([m - 1, m // 3])
+    valid = jnp.asarray(np.arange(m)[None, :] <= pos[:, None])
+    log_gz = jnp.full((b, mz), np.log(4.0), jnp.float32)
+    scale = hd ** -0.5
+    got = flash_decode_stats(q, k, v, valid, log_gz, kz, vz,
+                             scale=scale, interpret=True)
+    want = decode_stats_reference(q, k, v, valid, log_gz, kz, vz,
+                                  scale=scale)
+    err = max(float(jnp.max(jnp.abs(g - w))) for g, w in zip(got, want))
+    ok = err < 1e-5
+    report("micro/decode/kernel_vs_oracle", 0.0,
+           f"interpret-mode max|Δ|={err:.2e} ({'OK' if ok else 'FAIL'})")
+
+    # -- measured: concat-per-step vs two-pass stat merge --------------
+    b, m, mz, hq, hkv, hd = 4, 2048, 64, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    q = jax.random.normal(ks[0], (b, 1, hq, hd))
+    k = jax.random.normal(ks[1], (b, m, hkv, hd))
+    v = jax.random.normal(ks[2], (b, m, hkv, hd))
+    kz = jax.random.normal(ks[3], (b, mz, hkv, hd))
+    vz = jax.random.normal(ks[4], (b, mz, hkv, hd))
+    pos = np.full(b, m - 1)
+    valid = jnp.asarray(np.arange(m)[None, :] <= pos[:, None])
+    gz = jnp.full((b, mz), 16.0, jnp.float32)
+    owner = jnp.ones((b,), bool)
+    scale = hd ** -0.5
+
+    def f_old_fn(q, k, v, valid, gz, kz, vz, owner):
+        return prism_decode_attention(q, k, v, kz, vz, valid, gz,
+                                      owner, (), scale)
+
+    def f_new_fn(q, k, v, valid, gz, kz, vz, owner):
+        return decode_attention(q, k, v, valid, (), scale, gz=gz,
+                                kz=kz, vz=vz, owner=owner,
+                                mode="prism", backend="jnp")
+
+    def cache_sized_concats(fn, *args):
+        """Count concatenate eqns whose output carries >= M columns —
+        the per-step cache-sized HBM allocations the refactor removes."""
+        def walk(jx):
+            n = 0
+            for e in jx.eqns:
+                if (e.primitive.name == "concatenate"
+                        and len(e.outvars[0].aval.shape) >= 2
+                        and e.outvars[0].aval.shape[1] >= m):
+                    n += 1
+                for sub in e.params.values():
+                    subs = sub if isinstance(sub, (list, tuple)) else [sub]
+                    n += sum(walk(s.jaxpr) for s in subs
+                             if hasattr(s, "jaxpr"))
+            return n
+        return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+    args = (q, k, v, valid, gz, kz, vz, owner)
+    n_old = cache_sized_concats(f_old_fn, *args)
+    n_new = cache_sized_concats(f_new_fn, *args)
+    assert n_old > 0, "oracle lost its concat — bench is vacuous"
+    assert n_new == 0, f"decode path still concatenates ({n_new}x)"
+    report("micro/decode/cache_sized_concats", 0.0,
+           f"per step: old={n_old} new={n_new} (must be 0)")
+
+    f_old = jax.jit(f_old_fn)
+    f_new = jax.jit(f_new_fn)
+    t_old = timeit(lambda: f_old(*args).block_until_ready(), iters=30)
+    t_new = timeit(lambda: f_new(*args).block_until_ready(), iters=30)
+    report("micro/decode/prism_concat_step", t_old,
+           f"M={m}+{mz} cols, {n_old} cache-sized concats per step")
+    report("micro/decode/prism_twopass_step", t_new,
+           f"concat-free; wall-clock x{t_old / t_new:.2f} "
+           "(~1x on CPU: XLA fuses the concat; the win is HBM "
+           "allocation on accelerators)")
+
+    # exact path for the trajectory too (no concat in either, so this
+    # tracks the stats-path overhead vs the dense oracle)
+    from repro.runtime.serve import flash_decode_combine
+    f_dense = jax.jit(lambda q, k, v, valid:
+                      flash_decode_combine(q, k, v, valid, (), scale))
+    f_stats = jax.jit(lambda q, k, v, valid:
+                      decode_attention(q, k, v, valid, (), scale,
+                                       backend="jnp"))
+    t_dense = timeit(lambda: f_dense(q, k, v, valid).block_until_ready(),
+                     iters=20)
+    t_stats = timeit(lambda: f_stats(q, k, v, valid).block_until_ready(),
+                     iters=20)
+    report("micro/decode/exact_step", t_stats,
+           f"vs dense oracle {t_dense:.1f}us")
+
+    return {
+        "bench": "decode_attention",
+        "platform": jax.default_backend(),
+        "shape": {"B": b, "M_local": m, "M_means": mz, "Hq": hq,
+                  "Hkv": hkv, "hd": hd},
+        "kernel_vs_oracle_max_abs_err": err,
+        "kernel_vs_oracle_ok": bool(ok),
+        "cache_sized_concats_per_step_old": n_old,
+        "cache_sized_concats_per_step_new": n_new,
+        "concat_free": n_new == 0,
+        "prism_concat_us_per_step": t_old,
+        "prism_twopass_us_per_step": t_new,
+        "prism_concat_free_speedup": t_old / t_new,
+        "exact_stats_us_per_step": t_stats,
+        "exact_dense_oracle_us_per_step": t_dense,
+    }
 
 
 def main(report):
@@ -42,3 +189,27 @@ def main(report):
     t_sm = timeit(lambda: f_sm(x).block_until_ready(), iters=10)
     report("micro/segment_means/8x4096x1024->32", t_sm,
            f"{x.size * 4 / (t_sm / 1e6) / 1e9:.1f} GB/s read")
+
+    decode_attention_bench(report)
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_decode.json",
+                    help="where to write the decode-bench artifact")
+    args = ap.parse_args()
+
+    def _report(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    payload = decode_attention_bench(_report)
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {args.json}")
+    if not (payload["kernel_vs_oracle_ok"] and payload["concat_free"]):
+        sys.exit(1)

@@ -46,6 +46,15 @@ def _gqa_output(weights: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
     return out.reshape(b, nq, hq, v.shape[-1])
 
 
+def log_repeats(g: jnp.ndarray) -> jnp.ndarray:
+    """Repeat counts -> additive logit bias: log g, with g = 0 columns
+    sent to NEG_INF (dead — own-shard means, padding, not-yet-covered
+    segments).  The Eq. 14 scaling in the form every implementation
+    (jnp, streamed, Pallas) folds into its logits."""
+    g = g.astype(jnp.float32)
+    return jnp.where(g > 0, jnp.log(jnp.maximum(g, 1e-30)), NEG_INF)
+
+
 def scaling_softmax(
     logits: jnp.ndarray,          # (..., M)
     log_g: jnp.ndarray | None,    # (M,) or broadcastable; None => all-ones g

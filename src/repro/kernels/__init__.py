@@ -1,3 +1,28 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels + their jnp oracles for the repo's compute
+hot-spots, behind one backend switch (``dispatch.py``):
+
+  * ``prism_attention.py`` / ``ops.py`` — scaling-aware flash attention
+    (prefill path); ``ref.py`` is the dense oracle.
+  * ``decode_attention.py`` — fused single-token flash-decode partial
+    stats (the serving hot path), plus the concatenate-free two-pass
+    jnp reference.
+  * ``segment_means.py`` — fused Alg. 2 reduction.
+
+Every kernel validates against its oracle in interpret mode
+(tests/test_kernels.py, tests/test_decode_attention.py); ``interpret``
+defaults to platform auto-detection, so the same call sites compile on
+TPU and emulate elsewhere.
+"""
+from .decode_attention import (decode_stats_reference, flash_decode_stats,
+                               merge_stats, partial_softmax_stats)
+from .dispatch import (BACKENDS, default_interpret, pallas_interpret,
+                       resolve_backend, use_pallas)
+from .ops import prism_attention_op
+from .segment_means import segment_means_op
+
+__all__ = [
+    "BACKENDS", "decode_stats_reference", "default_interpret",
+    "flash_decode_stats", "merge_stats", "pallas_interpret",
+    "partial_softmax_stats", "prism_attention_op", "resolve_backend",
+    "segment_means_op", "use_pallas",
+]

@@ -2,7 +2,9 @@
 
 Handles layout (B,N,H,hd ↔ B,H,N,hd), block-multiple padding (padded
 columns get g=0 ⇒ log g = -1e30 ⇒ zero attention weight), and the
-interpret-mode switch (CPU validation vs TPU execution).
+interpret-mode switch (``interpret=None`` auto-detects: compiled on
+TPU, the Pallas interpreter for CPU validation — see
+``kernels.dispatch``).
 """
 from __future__ import annotations
 
@@ -12,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.attention import log_repeats
+from .dispatch import default_interpret
 from .prism_attention import prism_flash_attention, NEG
 
 
@@ -44,8 +48,9 @@ def prism_attention_op(
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    interpret = default_interpret(interpret)
     b, nq, hq, hd = q.shape
     m = k.shape[1]
     scale = float(hd ** -0.5) if scale is None else scale
@@ -55,8 +60,7 @@ def prism_attention_op(
     qt = _pad_to(q.swapaxes(1, 2), block_q, 2)            # (B,Hq,Nq',hd)
     kt = _pad_to(k.swapaxes(1, 2), block_k, 2)
     vt = _pad_to(v.swapaxes(1, 2), block_k, 2)
-    log_g = jnp.where(g > 0, jnp.log(jnp.maximum(g.astype(jnp.float32), 1e-30)), NEG)
-    log_g = _pad_to(log_g[None, :], block_k, 1, value=NEG)
+    log_g = _pad_to(log_repeats(g)[None, :], block_k, 1, value=NEG)
     lo = _pad_to(col_lo.astype(jnp.int32)[None, :], block_k, 1,
                  value=np.iinfo(np.int32).max)            # out-of-window too
     hi = _pad_to(col_hi.astype(jnp.int32)[None, :], block_k, 1,

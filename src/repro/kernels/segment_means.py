@@ -8,6 +8,7 @@ HBM round-trip over a separate jnp.mean (see EXPERIMENTS.md §Perf).
 Grid (L, D/blk_d): each program mean-reduces one (segment × feature-block)
 tile.  Even segments only (N_p % L == 0) — the ragged tail uses the jnp
 path (`repro.core.segment_means`), which is also the kernel's oracle.
+``interpret=None`` auto-detects the platform (``kernels.dispatch``).
 """
 from __future__ import annotations
 
@@ -16,6 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .dispatch import default_interpret
 
 
 def _kernel(x_ref, o_ref, *, seg: int):
@@ -26,13 +29,19 @@ def _kernel(x_ref, o_ref, *, seg: int):
 
 @functools.partial(jax.jit, static_argnames=("L", "block_d", "interpret"))
 def segment_means_op(x, *, L: int, block_d: int = 512,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """x (B, N_p, D) -> (B, L, D); requires N_p % L == 0."""
+    interpret = default_interpret(interpret)
     b, n, d = x.shape
     assert n % L == 0, "kernel path needs even segments; use jnp fallback"
     seg = n // L
     block_d = min(block_d, d)
-    assert d % block_d == 0
+    if d % block_d:
+        # largest divisor of d keeps the feature-block grid (768 with
+        # the default 512 -> 384); degenerate divisors (prime-ish d)
+        # fall back to one full-width tile
+        div = next(x for x in range(block_d, 0, -1) if d % x == 0)
+        block_d = div if div >= 128 else d
 
     def run(x2):          # (N_p, D) -> (L, D)
         return pl.pallas_call(

@@ -30,6 +30,12 @@ def main():
     ap.add_argument("--mesh", default="2x4")
     ap.add_argument("--decode-mode", default="exact",
                     choices=("exact", "prism"))
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "jnp"),
+                    help="kernel dispatch: auto = Pallas compiled on "
+                         "TPU, jnp elsewhere; pallas forces the kernels "
+                         "(interpret mode off-TPU); jnp forces the "
+                         "oracle path")
     ap.add_argument("--cr", type=float, default=4.0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--engine", action="store_true",
@@ -69,7 +75,8 @@ def main():
     n_seq = seq_shards(mesh, args.batch)
     n = args.prompt_len - args.prompt_len % n_seq
     cap = n + args.gen + (-(n + args.gen)) % n_seq
-    hp = ServeHParams(decode_mode=args.decode_mode, means_cr=args.cr)
+    hp = ServeHParams(decode_mode=args.decode_mode, means_cr=args.cr,
+                      backend=args.backend)
     prism = PrismConfig(
         P=model, cr=args.cr,
         mode="prism" if args.decode_mode == "prism" else "voltage")

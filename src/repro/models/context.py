@@ -48,6 +48,12 @@ class AugmentedKV:
     mask: Optional[jnp.ndarray]        # bool, (Nq,M) or (B',1,Nq,M)
     row_pos: jnp.ndarray               # (Nq,) or (B',Nq) — for q RoPE
     col_pos: jnp.ndarray               # (M,)  or (B',M)  — for k RoPE
+    # per-column global position ranges (M,), when the mask is purely
+    # positional — lets the Pallas kernel re-derive visibility in-VMEM
+    # instead of consuming the materialized (Nq, M) mask.  None when the
+    # mask carries extra structure (ring-halo clipping, batched masks).
+    col_lo: Optional[jnp.ndarray] = None
+    col_hi: Optional[jnp.ndarray] = None
 
 
 class SeqContext:

@@ -39,6 +39,15 @@ Continuous batching: ``pos`` is a (B,) vector — each batch row (decode
 writes are owner-masked per row.  ``insert_cache_row`` splices a newly
 prefilled request into a free slot mid-flight; ``repro.serving`` builds
 the request-level engine on top of these primitives.
+
+Kernel routing: every decode path funnels through ``decode_attention``
+below, which computes the per-shard partial softmax stats with the
+fused Pallas flash-decode kernel (``kernels/decode_attention.py``) or
+its two-pass jnp twin, per ``ServeHParams.backend``
+(``kernels/dispatch.py``; 'auto' = compiled Pallas on TPU, jnp
+elsewhere).  Prefill attention and the voltage means capture route
+through ``prism_attention_op`` / ``segment_means_op`` behind the same
+switch.  The dense jnp forms stay below as the test oracles.
 """
 from __future__ import annotations
 
@@ -52,10 +61,16 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import axis_size, shard_map
-from ..core.attention import _gqa_logits, _gqa_output, prism_attention
+from ..core.attention import (_gqa_logits, _gqa_output, log_repeats,
+                              prism_attention)
 from ..core.masks import NEG_INF
 from ..core.protocol import PrismConfig
 from ..core.segment_means import segment_means, segment_sizes, segment_bounds
+from ..kernels.decode_attention import (decode_stats_reference,
+                                        flash_decode_stats)
+from ..kernels.dispatch import pallas_interpret, use_pallas
+from ..kernels.ops import prism_attention_op
+from ..kernels.segment_means import segment_means_op
 from ..models import transformer as T
 from ..models.config import ModelConfig
 from ..models.layers import (AttnSpec, attn_project_q, attn_project_kv,
@@ -75,6 +90,8 @@ class ServeHParams:
     decode_tp: bool = False          # Megatron-TP position-wise ops (§Perf)
     ssm_chunk: int = 128
     means_cr: float = 16.0           # CR for the prism decode means cache
+    backend: str = "auto"            # kernel dispatch: 'auto'|'pallas'|'jnp'
+                                     # (see repro.kernels.dispatch)
 
 
 # --------------------------------------------------------------------------
@@ -320,17 +337,52 @@ def _write_slot(cache_kv, new_row, slot, owner):
     return cache_kv.at[rows, cols].set(upd)
 
 
-def flash_decode_combine(q, k, v, valid, axes, scale):
-    """Exact distributed flash-decoding.  q (B,1,Hq,hd); k,v are LOCAL
-    cache shards (B,M,Hkv,hd); ``valid`` (B,M) bool (per-request column
-    visibility).  Combines partial softmax stats over ``axes`` —
-    O(B·Hq·hd) traffic, independent of N."""
-    s = _gqa_logits(q, k, scale)                          # (B,Hq,1,M)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    m_p = jnp.max(s, axis=-1, keepdims=True)              # (B,Hq,1,1)
-    e = jnp.exp(s - m_p)
-    l_p = jnp.sum(e, axis=-1, keepdims=True)              # (B,Hq,1,1)
-    acc_p = _gqa_output(e.astype(v.dtype), v)             # (B,1,Hq,hd)
+def decode_attention(q, k, v, valid, axes, scale, *, gz=None, kz=None,
+                     vz=None, owner=None, mode="exact", backend="auto"):
+    """Single entry point for per-token decode attention — every decode
+    path (exact flash-decode, prism means decode, the TP variant) routes
+    here.  Partial softmax stats (m, l, acc) over the LOCAL cache shard
+    — plus, in prism mode, the means columns folded in via the ``+log g``
+    bias, with no cache-sized concatenate on either backend — come from
+    the Pallas kernel (``backend='pallas'``) or the two-pass jnp
+    implementation (``'jnp'``; ``'auto'`` picks by platform).  The
+    cross-shard combine is unchanged from ``flash_decode_combine`` /
+    ``prism_decode_attention``, which remain below as the dense jnp
+    test oracles.
+
+    q (B,1,Hq,hd); k,v (B,M,Hkv,hd) local shard; valid (B,M) bool.
+    Prism extras: gz (B,m) per-row means repeat counts (0 = dead
+    column), kz/vz (B,m,Hkv,hd), owner (B,) bool, mode='prism'.
+    """
+    log_gz = log_repeats(gz) if kz is not None else None
+    if use_pallas(backend):
+        m_p, l_p, acc_p = flash_decode_stats(
+            q, k, v, valid, log_gz, kz, vz, scale=scale,
+            interpret=pallas_interpret())
+    else:
+        m_p, l_p, acc_p = decode_stats_reference(
+            q, k, v, valid, log_gz, kz, vz, scale=scale)
+
+    if mode == "prism":
+        # scaling-aware softmax already folded into the stats; normalize
+        # locally and select the owner's view (paper rule) via psum
+        denom = jnp.maximum(l_p[:, :, 0, 0], 1e-30)       # (B,Hq)
+        out = (acc_p / denom[:, None, :, None]).astype(v.dtype)
+        if axes:
+            sel = owner[:, None, None, None]
+            out = lax.psum(jnp.where(sel, out, jnp.zeros_like(out)), axes)
+        return out
+
+    # exact: the flash-decoding pmax/psum stat combine
+    return _combine_exact(m_p, l_p, acc_p, axes).astype(v.dtype)
+
+
+def _combine_exact(m_p, l_p, acc_p, axes):
+    """Cross-shard flash-softmax stat combine: rescale each shard's
+    (l, acc) to the global max, psum, normalize.  O(B·Hq·hd) traffic,
+    independent of N.  Shards with no valid column (m = NEG) cancel via
+    corr = 0; an all-shards-empty row lands on the 1e-30 clamp and
+    yields a finite zero."""
     m_g = lax.pmax(m_p, axes) if axes else m_p
     corr = jnp.exp(m_p - m_g)                             # (B,Hq,1,1)
     l_c = l_p * corr
@@ -342,19 +394,37 @@ def flash_decode_combine(q, k, v, valid, axes, scale):
     return acc_c / denom[:, None, :, None].astype(acc_c.dtype)
 
 
+def flash_decode_combine(q, k, v, valid, axes, scale):
+    """Exact distributed flash-decoding, dense jnp form — materializes
+    the (B,Hq,1,M) score tensor, so it now serves as the TEST ORACLE for
+    ``decode_attention`` (the runtime routes through the kernel/two-pass
+    path above).  q (B,1,Hq,hd); k,v are LOCAL cache shards
+    (B,M,Hkv,hd); ``valid`` (B,M) bool (per-request column visibility).
+    Combines partial softmax stats over ``axes`` — O(B·Hq·hd) traffic,
+    independent of N."""
+    s = _gqa_logits(q, k, scale)                          # (B,Hq,1,M)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m_p = jnp.max(s, axis=-1, keepdims=True)              # (B,Hq,1,1)
+    e = jnp.exp(s - m_p)
+    l_p = jnp.sum(e, axis=-1, keepdims=True)              # (B,Hq,1,1)
+    acc_p = _gqa_output(e.astype(v.dtype), v)             # (B,1,Hq,hd)
+    return _combine_exact(m_p, l_p, acc_p, axes)
+
+
 def prism_decode_attention(q, k_loc, v_loc, kz, vz, valid, gz, owner,
                            axes, scale):
-    """Paper-faithful decode: exact local columns (g=1 where valid) plus
-    remote Segment-Means columns (g = segment sizes; 0 for own shard),
-    scaling-aware softmax, owner's view selected via masked psum.
-    ``valid`` (B,M_loc), ``gz`` (B,m) and ``owner`` (B,) are per-request
-    — slots decode at independent depths."""
+    """Paper-faithful decode, dense jnp form — TEST ORACLE for
+    ``decode_attention(mode='prism')``; the runtime no longer pays this
+    per-step cache-sized concatenate.  Exact local columns (g=1 where
+    valid) plus remote Segment-Means columns (g = segment sizes; 0 for
+    own shard), scaling-aware softmax, owner's view selected via masked
+    psum.  ``valid`` (B,M_loc), ``gz`` (B,m) and ``owner`` (B,) are
+    per-request — slots decode at independent depths."""
     k_all = jnp.concatenate([k_loc, kz.astype(k_loc.dtype)], axis=1)
     v_all = jnp.concatenate([v_loc, vz.astype(v_loc.dtype)], axis=1)
     g = jnp.concatenate([valid.astype(jnp.float32), gz], axis=1)
     s = _gqa_logits(q, k_all, scale)                      # (B,Hq,1,M)
-    log_g = jnp.where(g > 0, jnp.log(jnp.maximum(g, 1e-30)), NEG_INF)
-    s = s + log_g[:, None, None, :]
+    s = s + log_repeats(g)[:, None, None, :]
     s = s - jnp.max(s, axis=-1, keepdims=True)
     e = jnp.exp(s)
     w = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
@@ -434,7 +504,8 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
         valid = col_pos >= 0
         if spec.window:
             valid &= col_pos > pos[:, None] - spec.window
-        out = flash_decode_combine(q, k_c, v_c, valid, (), scale)
+        out = decode_attention(q, k_c, v_c, valid, (), scale,
+                               backend=hp.backend)
         new_c = dict(c, k=k_c, v=v_c)
     else:
         idx = _seq_index(lay.seq_axes)
@@ -448,12 +519,13 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
                 (jnp.asarray(shard_of)[None, :] != idx)
                 & (jnp.asarray(hi)[None, :] <= pos[:, None]),
                 jnp.asarray(sizes)[None, :], 0.0)
-            out = prism_decode_attention(
-                q, k_c, v_c, c["kz"], c["vz"], valid, gz,
-                owner, lay.seq_axes, scale)
+            out = decode_attention(
+                q, k_c, v_c, valid, lay.seq_axes, scale,
+                gz=gz, kz=c["kz"], vz=c["vz"], owner=owner,
+                mode="prism", backend=hp.backend)
         else:
-            out = flash_decode_combine(q, k_c, v_c, valid,
-                                       lay.seq_axes, scale)
+            out = decode_attention(q, k_c, v_c, valid, lay.seq_axes,
+                                   scale, backend=hp.backend)
         new_c = dict(c, k=k_c, v=v_c)
 
     o = attn_output(p["attn"], out)
@@ -508,7 +580,8 @@ def attn_decode_tp(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
     k_c = _write_slot(c["k"], k_new, slot, owner)
     v_c = _write_slot(c["v"], v_new, slot, owner)
     valid = col_pos[None, :] <= pos[:, None]
-    out = flash_decode_combine(q, k_c, v_c, valid, lay.seq_axes, scale)
+    out = decode_attention(q, k_c, v_c, valid, lay.seq_axes, scale,
+                           backend=hp.backend)
     new_c = dict(c, k=k_c, v=v_c)
 
     if attn_tp:
@@ -751,6 +824,23 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
 # prefill
 # --------------------------------------------------------------------------
 
+def _prefill_attention(q, k, v, akv, spec: AttnSpec, cfg: ModelConfig,
+                       hp: ServeHParams):
+    """Route the prefill attention through the Pallas flash kernel when
+    the backend switch says so AND the augment carries positional
+    (col_lo, col_hi) ranges — the kernel re-derives the mask in-VMEM.
+    Views with extra mask structure (ring halo) stay on the jnp path."""
+    if use_pallas(hp.backend) and akv.col_lo is not None:
+        g = (akv.g if akv.g is not None
+             else jnp.ones((k.shape[1],), jnp.float32))
+        return prism_attention_op(
+            q, k, v, g, akv.col_lo, akv.col_hi, akv.row_pos,
+            causal=spec.causal, prefix_len=cfg.prefix_len,
+            window=spec.window, interpret=pallas_interpret())
+    return prism_attention(q, k, v, g=akv.g, mask=akv.mask,
+                           block=cfg.attn_block)
+
+
 def prefill_attn(p, spec: AttnSpec, cfg: ModelConfig, x, ctx, lay,
                  hp: ServeHParams, prism_augment: bool):
     """Attention sublayer that also captures this layer's decode cache."""
@@ -759,8 +849,7 @@ def prefill_attn(p, spec: AttnSpec, cfg: ModelConfig, x, ctx, lay,
     xh_n = norm(p["ln1"], akv.x_hat, cfg.norm_kind)
     q = attn_project_q(p["attn"], spec, xq_n, akv.row_pos)
     k, v = attn_project_kv(p["attn"], spec, xh_n, akv.col_pos)
-    o = prism_attention(q, k, v, g=akv.g, mask=akv.mask,
-                        block=cfg.attn_block)
+    o = _prefill_attention(q, k, v, akv, spec, cfg, hp)
     o = attn_output(p["attn"], o)
     if cfg.parallel_block:
         o = o + mlp(p["mlp"], xq_n, cfg.mlp_kind)
@@ -798,7 +887,11 @@ def prefill_attn(p, spec: AttnSpec, cfg: ModelConfig, x, ctx, lay,
             cache["kz"] = k[:, n_loc:n_loc + m]
             cache["vz"] = v[:, n_loc:n_loc + m]
         else:                           # voltage prefill: compute means-KV
-            z = segment_means(x, lay.L)
+            if use_pallas(hp.backend) and x.shape[1] % lay.L == 0:
+                z = segment_means_op(x, L=lay.L,
+                                     interpret=pallas_interpret())
+            else:                       # ragged segments: jnp path
+                z = segment_means(x, lay.L)
             zg = ctx._gather(z)
             b = x.shape[0]
             z_all = jnp.moveaxis(zg, 0, 1).reshape(b, m, x.shape[-1])

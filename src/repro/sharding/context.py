@@ -89,7 +89,8 @@ class ShardedPrismContext(SeqContext):
         x_hat = jnp.moveaxis(xg, 0, 1).reshape(b, n, x.shape[-1])
         col = jnp.arange(n) + self.global_start
         vis = self._vis(row_pos, col, col, spec)
-        return x, AugmentedKV(x_hat, None, vis, row_pos, col)
+        return x, AugmentedKV(x_hat, None, vis, row_pos, col,
+                              col_lo=col, col_hi=col)
 
     def _augment_prism(self, x, spec, n_loc, p_idx, start, row_pos):
         b, _, d = x.shape
@@ -117,7 +118,10 @@ class ShardedPrismContext(SeqContext):
             [row_pos.astype(jnp.float32), (z_lo + z_hi) / 2.0])
         vis = self._vis(row_pos, col_lo, col_hi, spec)
         vis = vis & (g > 0)[None, :]
-        return x, AugmentedKV(x_hat, g, vis, row_pos, col_pos)
+        # g = 0 columns need no mask entry for the kernel: log g = -inf
+        # already zeroes them, so (col_lo, col_hi) alone reproduce vis
+        return x, AugmentedKV(x_hat, g, vis, row_pos, col_pos,
+                              col_lo=col_lo, col_hi=col_hi)
 
     def _augment_window(self, x, spec, n_loc, start, row_pos):
         """Ring halo: gather the previous ceil(W / n_loc) shards' tokens."""

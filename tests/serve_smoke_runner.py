@@ -19,15 +19,17 @@ from repro.runtime.serve import (ServeHParams, make_prefill_step,
                                  make_serve_step, make_layout, grow_cache)
 
 
-def check(name, cfg, mode, *, atol, batch=8, n=32, gen=4):
+def check(name, cfg, mode, *, atol, batch=8, n=32, gen=4, backend="auto"):
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     key = jax.random.PRNGKey(0)
     params = T.init(cfg, key)
     total = n + gen
     tokens = jax.random.randint(key, (batch, total), 0, cfg.vocab_size)
 
+    name = f"{name}+{backend}" if backend != "auto" else name
     hp = ServeHParams(decode_mode="exact" if mode == "tp" else mode,
-                      decode_tp=(mode == "tp"), ssm_chunk=8, means_cr=4.0)
+                      decode_tp=(mode == "tp"), ssm_chunk=8, means_cr=4.0,
+                      backend=backend)
     prism = PrismConfig(P=4, mode="prism" if mode == "prism" else "voltage")
     prefill, lay_p, _, _ = make_prefill_step(
         cfg, mesh, params, prism, batch=batch, n=n, hp=hp)
@@ -81,6 +83,12 @@ def main():
     ok &= check("dense", dense, "exact", atol=5e-5)
     ok &= check("dense", dense, "prism", atol=0.5)
     ok &= check("dense", dense, "tp", atol=5e-5)
+    # forced-Pallas (interpret off-TPU): the kernels on a real 4-way
+    # sequence-sharded mesh — exact vs the full-forward oracle proves
+    # the cross-shard stat combine over kernel stats; prism exercises
+    # the in-kernel means columns with real per-shard gz
+    ok &= check("dense", dense, "exact", atol=5e-5, backend="pallas")
+    ok &= check("dense", dense, "prism", atol=0.5, backend="pallas")
 
     window = ModelConfig(
         name="tiny-window", arch_type="dense", n_layers=2, d_model=64,
