@@ -99,6 +99,46 @@ def comm_bytes_total(s: EncSpec, mode: str, p: int, L: int,
     return s.n_layers * comm_elements(s, mode, p, L) * bytes_per_el
 
 
+def cached_attn_layer_flops(*, d: int, h: int, hd: int, hkv: int,
+                            d_ff: int, gated: bool, nq: int,
+                            m: int) -> float:
+    """One Transformer block on the SERVING path: ``nq`` new tokens are
+    projected (Q and K/V — the cache already holds every earlier K/V
+    row, unlike ``layer_flops_device`` where the teacher-forced prefill
+    recomputes all m rows) and attended against ``m`` cached source
+    rows.  This is the deterministic cost model the engine-throughput
+    bench uses for its logical clock: one decode step, one prefill
+    chunk, and one padded flush are all instances with different
+    (nq, m) — so the chunked-vs-padded comparison and the CI
+    bench-regression gate are free of wall-clock noise."""
+    dh = h * hd
+    dkv = hkv * hd
+    f = 2.0 * nq * d * dh                  # W_q
+    f += 2.0 * 2 * nq * d * dkv            # W_k, W_v (new tokens only)
+    f += 2.0 * nq * m * dh                 # Q K^T
+    f += 2.0 * nq * m * dh                 # S V
+    f += 2.0 * nq * dh * d                 # W_o
+    ff_mults = 3 if gated else 2
+    f += 2.0 * ff_mults * nq * d * d_ff    # FFN
+    return f
+
+
+def serve_step_flops(cfg, *, rows: int, nq_per_row: int, m: int,
+                     lm_head: bool = False) -> float:
+    """Whole-model serving-step FLOPs for a ``repro`` ModelConfig:
+    ``rows`` batch rows each contributing ``nq_per_row`` new tokens
+    against ``m`` cached columns.  ``lm_head`` adds the output-vocab
+    matmul (decode pays it every step; prefill chunks return no
+    logits)."""
+    f = cfg.n_layers * cached_attn_layer_flops(
+        d=cfg.d_model, h=cfg.n_heads, hd=cfg.hd, hkv=cfg.n_kv_heads,
+        d_ff=cfg.d_ff, gated=cfg.mlp_kind in ("swiglu", "geglu"),
+        nq=rows * nq_per_row, m=m)
+    if lm_head:
+        f += 2.0 * rows * cfg.d_model * cfg.vocab_size
+    return f
+
+
 def speedup(base: float, ours: float) -> float:
     return 100.0 * (1.0 - ours / base) if base else 0.0
 

@@ -1,0 +1,126 @@
+"""Bench-regression gate: compare fresh benchmark artifacts against
+the baselines committed at the repo root and FAIL on regression.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --decode-baseline BENCH_decode.json \
+        --decode-current  out/BENCH_decode.json \
+        --engine-baseline BENCH_engine.json \
+        --engine-current  out/BENCH_engine.json \
+        --out out/BENCH_compare.json
+
+Gates (exit 1 on any failure):
+
+  * structural, from the decode microbench artifact — the Pallas
+    flash-decode kernel must match its jnp oracle and the decode path
+    must stay concatenate-free (the PR-3 win cannot silently regress);
+  * structural, from the engine artifact — chunked prefill must keep
+    costing fewer FLOPs per request and no worse TTFT than the padded
+    baseline (the PR-4 win);
+  * throughput — the engine's logical-clock requests-per-kstep on the
+    main trace may not regress more than ``--tolerance`` (default 20%)
+    vs the committed baseline.  The logical clock runs on the analytic
+    FLOP cost model (``benchmarks/common.py``), so this number is a
+    deterministic function of the code and the gate is free of CI
+    wall-clock noise.
+
+Wall-clock fields are compared and reported in the output artifact but
+never gated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(decode_base, decode_cur, engine_base, engine_cur,
+            tolerance: float) -> dict:
+    """Pure comparison — returns {'gates': [...], 'ok': bool, ...}."""
+    gates = []
+
+    def gate(name, ok, detail):
+        gates.append({"gate": name, "ok": bool(ok), "detail": detail})
+
+    # -- decode microbench: structural ---------------------------------
+    gate("decode/kernel_vs_oracle",
+         decode_cur.get("kernel_vs_oracle_ok", False),
+         f"max|Δ|={decode_cur.get('kernel_vs_oracle_max_abs_err')}")
+    gate("decode/concat_free", decode_cur.get("concat_free", False),
+         f"cache-sized concats per step="
+         f"{decode_cur.get('cache_sized_concats_per_step_new')}")
+
+    # -- engine bench: structural --------------------------------------
+    eg = engine_cur.get("gates", {})
+    gate("engine/short_prefill_flops_lower",
+         eg.get("short_prefill_flops_lower", False),
+         str(engine_cur.get("prefill_flops_per_request", {})))
+    gate("engine/short_ttft_no_worse",
+         eg.get("short_ttft_no_worse", False),
+         "chunked TTFT p50 <= padded TTFT p50 on the short-prompt trace")
+    gate("engine/chunked_vs_padded_ttft_no_worse",
+         eg.get("chunked_vs_padded_ttft_no_worse", False),
+         "chunked TTFT p50 <= padded TTFT p50 on the main trace")
+
+    # -- engine bench: logical-clock throughput vs baseline ------------
+    cur = engine_cur["traces"]["main"]["chunked"]["requests_per_ksteps"]
+    base = engine_base["traces"]["main"]["chunked"]["requests_per_ksteps"]
+    floor = (1.0 - tolerance) * base
+    gate("engine/throughput_vs_baseline", cur >= floor,
+         f"current={cur:.2f} baseline={base:.2f} floor={floor:.2f} "
+         f"req/kstep (logical clock, deterministic)")
+
+    # -- reported, never gated -----------------------------------------
+    wall = {}
+    for mode, row in engine_cur["traces"]["main"].items():
+        b = engine_base["traces"]["main"].get(mode, {})
+        wall[mode] = {
+            "decode_ms": {"current": row.get("wall_decode_ms"),
+                          "baseline": b.get("wall_decode_ms")},
+            "prefill_ms": {"current": row.get("wall_prefill_ms"),
+                           "baseline": b.get("wall_prefill_ms")},
+        }
+    speed = {
+        "prism_concat_free_speedup": {
+            "current": decode_cur.get("prism_concat_free_speedup"),
+            "baseline": decode_base.get("prism_concat_free_speedup")},
+    }
+    return {"ok": all(g["ok"] for g in gates), "tolerance": tolerance,
+            "gates": gates, "wall_ungated": wall,
+            "microbench_ungated": speed}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--decode-baseline", default="BENCH_decode.json")
+    ap.add_argument("--decode-current", required=True)
+    ap.add_argument("--engine-baseline", default="BENCH_engine.json")
+    ap.add_argument("--engine-current", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional throughput regression")
+    ap.add_argument("--out", default=None,
+                    help="write the comparison artifact here")
+    args = ap.parse_args(argv)
+
+    result = compare(_load(args.decode_baseline),
+                     _load(args.decode_current),
+                     _load(args.engine_baseline),
+                     _load(args.engine_current),
+                     args.tolerance)
+    for g in result["gates"]:
+        print(f"[{'PASS' if g['ok'] else 'FAIL'}] {g['gate']}: "
+              f"{g['detail']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {args.out}")
+    print("# bench-regression gate:", "OK" if result["ok"] else "FAILED")
+    return 0 if result["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

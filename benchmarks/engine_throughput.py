@@ -1,27 +1,40 @@
-"""Continuous batching vs static batching on a staggered-arrival trace.
+"""Serving-engine benchmark: chunked prefill vs padded flushes vs
+static batching, on staggered-arrival traces.
 
-Replays the same Poisson trace through two ServingEngine instances that
+Replays identical Poisson traces through ServingEngine instances that
 differ only in admission policy:
 
-  * continuous — FIFO admission into any freed slot, mid-flight
-  * gang       — classic static batching: admit only into an empty
-                 pool, drain it completely (head-of-line blocking)
+  * chunked — the system: FIFO admission into any freed slot, prompts
+              prefilled ``chunk_len`` tokens at a time, chunk steps
+              interleaved with decodes
+  * padded  — PR-2 continuous batching: one monolithic right-padded
+              prefill flush per admission
+  * gang    — classic static batching (admit into an empty pool only,
+              drain completely): the head-of-line-blocking baseline
 
-To keep the comparison deterministic on noisy shared CPUs, the engines
-run on a *logical* clock (the injectable ``clock=`` hook): one decode
-step costs 1 unit, one prefill flush costs its measured wall-clock
-multiple of a decode step, and idle time jumps to the next arrival.
-Requests/s and TTFT are then converted back to wall time with the
-measured decode-step latency, so the numbers are real — only the
-scheduling comparison is noise-free.  Run standalone::
+To keep the comparison deterministic on noisy shared CPUs — and
+gateable in CI (``benchmarks/compare.py``) — the engines run on a
+*logical* clock whose step costs come from the ANALYTIC FLOP model in
+``benchmarks/common.py``: one decode step costs 1 unit; a chunk step
+and a padded flush cost their FLOP multiple of a decode step.  Every
+logical metric (requests per kstep, TTFT in steps, prefill FLOPs per
+request) is a pure function of the code + trace seed.  Measured
+wall-clock per step kind is reported alongside for the wall-time
+conversions, but nothing gated depends on it.
 
-    PYTHONPATH=src python -m benchmarks.engine_throughput
+Run standalone (writes the ``BENCH_engine.json`` artifact)::
+
+    PYTHONPATH=src python -m benchmarks.engine_throughput \
+        --json BENCH_engine.json
 
 or via the harness (``python -m benchmarks.run --only engine``).
 """
 from __future__ import annotations
 
 import time
+
+N_SLOTS, PREFILL_LEN, MAX_CACHE = 4, 32, 96
+CHUNK_LEN, DECODE_PER_PREFILL = 8, 2
 
 
 class StepClock:
@@ -34,132 +47,259 @@ class StepClock:
         return self.t
 
 
-def build_engine(gang: bool):
-    import jax
+def bench_config():
     from repro.models.config import ModelConfig
-    from repro.models import transformer as T
-    from repro.runtime.serve import ServeHParams
-    from repro.serving import ServingEngine
-
-    cfg = ModelConfig(
+    return ModelConfig(
         name="bench-dense", arch_type="dense", n_layers=4, d_model=64,
         n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
         mlp_kind="swiglu", norm_kind="rmsnorm", pos="rope",
         tie_embeddings=True)
+
+
+def logical_costs(cfg) -> dict:
+    """Analytic per-step costs in decode-step units (deterministic)."""
+    from .common import serve_step_flops
+    decode = serve_step_flops(cfg, rows=N_SLOTS, nq_per_row=1,
+                              m=MAX_CACHE, lm_head=True)
+    chunk = serve_step_flops(cfg, rows=N_SLOTS, nq_per_row=CHUNK_LEN,
+                             m=PREFILL_LEN)
+    flush = serve_step_flops(cfg, rows=N_SLOTS, nq_per_row=PREFILL_LEN,
+                             m=PREFILL_LEN, lm_head=True)
+    return {"decode": 1.0, "chunk": chunk / decode,
+            "padded_flush": flush / decode, "decode_flops": decode}
+
+
+def prefill_flops_per_request(cfg, plens, mode: str) -> float:
+    """Mean per-request prefill FLOPs over a trace's prompt lengths:
+    chunked pays ceil(len/chunk) chunks of chunk_len queries against
+    the prefill region; padded always pays the full pad-to-length
+    forward."""
+    from .common import serve_step_flops
+    total = 0.0
+    for plen in plens:
+        if mode == "chunked":
+            n_chunks = -(-plen // CHUNK_LEN)
+            total += n_chunks * serve_step_flops(
+                cfg, rows=1, nq_per_row=CHUNK_LEN, m=PREFILL_LEN)
+        else:
+            total += serve_step_flops(cfg, rows=1,
+                                      nq_per_row=PREFILL_LEN,
+                                      m=PREFILL_LEN, lm_head=True)
+    return total / max(1, len(plens))
+
+
+def build_engine(mode: str):
+    import jax
+    from repro.models import transformer as T
+    from repro.runtime.serve import ServeHParams
+    from repro.serving import ServingEngine
+
+    cfg = bench_config()
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     params = T.init(cfg, jax.random.PRNGKey(0))
     clock = StepClock()
-    eng = ServingEngine(cfg, mesh, params, n_slots=4, prefill_len=32,
-                        max_cache=96,
-                        hp=ServeHParams(decode_mode="exact", ssm_chunk=8),
-                        decode_per_prefill=2, gang=gang, clock=clock)
+    eng = ServingEngine(
+        cfg, mesh, params, n_slots=N_SLOTS, prefill_len=PREFILL_LEN,
+        max_cache=MAX_CACHE,
+        hp=ServeHParams(decode_mode="exact", ssm_chunk=8),
+        decode_per_prefill=DECODE_PER_PREFILL,
+        chunk_len=CHUNK_LEN,
+        prefill_mode="padded" if mode == "padded" else "chunked",
+        gang=(mode == "gang"), clock=clock)
     return eng, clock, cfg
 
 
-def calibrate(eng, clock) -> tuple:
-    """Measure the wall cost of a decode step and a prefill flush on the
-    compiled engine.  Returns (decode_s, prefill_over_decode_ratio)."""
-    times = {"prefill": [], "decode": []}
-    for i in range(4):                      # staggered: several prefills
-        eng.submit([1 + i, 2, 3], max_new_tokens=6)
-        while eng._sched.has_work:
-            t0 = time.perf_counter()
-            kind = eng.step()
-            dt = time.perf_counter() - t0
-            if kind in times:
-                times[kind].append(dt)
-            clock.t += 1.0
-    times["decode"].sort()
-    times["prefill"].sort()
-    dec = times["decode"][len(times["decode"]) // 2]
-    pre = times["prefill"][len(times["prefill"]) // 2]
-    return dec, max(1.0, pre / dec)
+def make_trace(cfg, *, n_requests, arrival_gap, plen_range, gen_range,
+               seed=0):
+    """Shared deterministic Poisson trace: [(arrival, prompt, gen)]."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(arrival_gap, size=n_requests))
+    out = []
+    for i in range(n_requests):
+        plen = int(rng.integers(*plen_range))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen).tolist()
+        out.append((float(arrivals[i]), prompt,
+                    int(rng.integers(*gen_range))))
+    return out
 
 
-def run_engine(gang: bool, *, n_requests=24, arrival_gap=2.0, seed=0):
-    """Drive one engine over the shared trace.  ``arrival_gap`` is the
-    mean Poisson gap in decode-step units (mean service is ~8 units per
-    request on 4 slots, so a gap of 2 keeps a backlog — the regime
-    where admission policy decides throughput)."""
+def run_trace(mode: str, trace, costs) -> dict:
+    """Drive one engine over a trace on the analytic logical clock.
+    Returns logical metrics plus measured wall ms per step kind."""
     import numpy as np
     from repro.serving import EngineStats, SamplingParams
 
-    eng, clock, cfg = build_engine(gang)
-    decode_s, prefill_cost = calibrate(eng, clock)
+    eng, clock, cfg = build_engine(mode)
+    # compile warmup outside the measured window (one multi-chunk
+    # prompt + one short, through eviction)
+    eng.submit(list(range(1, 20)), max_new_tokens=2)
+    eng.submit([1, 2, 3], max_new_tokens=2)
+    eng.run()
     warmed = len(eng.results())
     eng.stats = EngineStats(n_slots=eng.n_slots)
 
-    rng = np.random.default_rng(seed)
-    arrivals = clock.t + np.cumsum(
-        rng.exponential(arrival_gap, size=n_requests))
-    for i in range(n_requests):
-        plen = int(rng.integers(8, 33))
-        eng.submit(rng.integers(1, cfg.vocab_size, size=plen),
-                   max_new_tokens=int(rng.integers(8, 57)),
+    t0_trace = clock.t
+    for i, (arrival, prompt, gen) in enumerate(trace):
+        eng.submit(prompt, max_new_tokens=gen,
                    sampling=SamplingParams(seed=i),
-                   arrival=float(arrivals[i]))
+                   arrival=t0_trace + arrival)
 
-    t_start = clock.t
+    cost = {"decode": costs["decode"],
+            "prefill": (costs["chunk"] if mode != "padded"
+                        else costs["padded_flush"])}
+    wall = {"decode": [], "prefill": []}
     while eng._sched.has_work or eng._pending:
+        w0 = time.perf_counter()
         kind = eng.step()
-        if kind == "decode":
-            clock.t += 1.0
-        elif kind == "prefill":
-            clock.t += prefill_cost
+        if kind in cost:
+            wall[kind].append(time.perf_counter() - w0)
+            clock.t += cost[kind]
         else:                               # idle: jump to next arrival
-            # advance in the ENGINE's frame — next_arrival()/now() are
-            # engine-relative, and the raw clock may have a nonzero
-            # origin by the time the trace runs
             clock.t += max(0.0, eng.next_arrival() - eng.now())
-    steps = clock.t - t_start
-    assert len(eng.results()) == n_requests + warmed
+    steps = clock.t - t0_trace
+    assert len(eng.results()) == len(trace) + warmed
 
     s = eng.stats.summary()
+    med = (lambda xs: 1e3 * float(np.median(xs)) if xs else 0.0)
     return {
-        "requests_per_ksteps": 1e3 * n_requests / steps,
-        "requests_per_s": n_requests / (steps * decode_s),
+        "requests_per_ksteps": 1e3 * len(trace) / steps,
         "ttft_p50_steps": s["ttft_p50_s"],   # logical-clock units
         "ttft_p90_steps": s["ttft_p90_s"],
-        "ttft_p50_ms": 1e3 * s["ttft_p50_s"] * decode_s,
-        "ttft_p90_ms": 1e3 * s["ttft_p90_s"] * decode_s,
+        "ttft_max_steps": s["ttft_max_s"],
         "occupancy": s["occupancy"],
-        "decode_step_ms": 1e3 * decode_s,
-        "prefill_cost_steps": prefill_cost,
+        "prefills": s["prefills"],
+        "prefill_chunks": s["prefill_chunks"],
+        "prefill_tokens": s["prefill_tokens"],
+        "decode_steps": s["decode_steps"],
+        "elapsed_steps": steps,
+        "wall_decode_ms": med(wall["decode"]),
+        "wall_prefill_ms": med(wall["prefill"]),
+    }
+
+
+def run_all() -> dict:
+    """Both traces through every relevant engine; the BENCH_engine.json
+    payload, including the structural gates compare.py enforces."""
+    import jax
+
+    cfg = bench_config()
+    costs = logical_costs(cfg)
+    # main trace: generation-dominated serving at moderate load (chat
+    # regime — decode work ≫ prefill work, generation lengths highly
+    # variable, arrivals near the service rate).  Under heavy
+    # saturation static batching amortizes prefill across a whole gang
+    # and wins raw FLOP throughput (the docs discuss it); the serving
+    # regime users feel is this one, where head-of-line blocking shows.
+    main_trace = make_trace(cfg, n_requests=24, arrival_gap=30.0,
+                            plen_range=(8, 33), gen_range=(8, 65), seed=0)
+    # short-prompt trace: where pad-to-prefill_len waste is largest
+    short_trace = make_trace(cfg, n_requests=16, arrival_gap=2.0,
+                             plen_range=(4, 9), gen_range=(8, 25), seed=1)
+
+    res = {
+        "main": {m: run_trace(m, main_trace, costs)
+                 for m in ("chunked", "padded", "gang")},
+        "short": {m: run_trace(m, short_trace, costs)
+                  for m in ("chunked", "padded")},
+    }
+    flops = {
+        "main_chunked": prefill_flops_per_request(
+            cfg, [len(p) for _, p, _ in main_trace], "chunked"),
+        "main_padded": prefill_flops_per_request(
+            cfg, [len(p) for _, p, _ in main_trace], "padded"),
+        "short_chunked": prefill_flops_per_request(
+            cfg, [len(p) for _, p, _ in short_trace], "chunked"),
+        "short_padded": prefill_flops_per_request(
+            cfg, [len(p) for _, p, _ in short_trace], "padded"),
+    }
+    gates = {
+        # chunked prefill must cost fewer FLOPs per request AND no
+        # worse median TTFT than the padded baseline on short prompts
+        "short_prefill_flops_lower": (flops["short_chunked"]
+                                      < flops["short_padded"]),
+        "short_ttft_no_worse": (
+            res["short"]["chunked"]["ttft_p50_steps"]
+            <= res["short"]["padded"]["ttft_p50_steps"] + 1e-9),
+        # chunked beats the padded-flush admission it replaces
+        "chunked_vs_padded_ttft_no_worse": (
+            res["main"]["chunked"]["ttft_p50_steps"]
+            <= res["main"]["padded"]["ttft_p50_steps"] + 1e-9),
+        # continuous batching vs static: TTFT is the classic win
+        "continuous_vs_gang_ttft_speedup": (
+            res["main"]["gang"]["ttft_p50_steps"]
+            / max(res["main"]["chunked"]["ttft_p50_steps"], 1e-9)),
+        "continuous_vs_gang_speedup": (
+            res["main"]["chunked"]["requests_per_ksteps"]
+            / res["main"]["gang"]["requests_per_ksteps"]),
+    }
+    return {
+        "bench": "engine_throughput",
+        "platform": jax.default_backend(),
+        "config": {"n_slots": N_SLOTS, "prefill_len": PREFILL_LEN,
+                   "max_cache": MAX_CACHE, "chunk_len": CHUNK_LEN,
+                   "decode_per_prefill": DECODE_PER_PREFILL,
+                   "n_layers": cfg.n_layers, "d_model": cfg.d_model},
+        "logical_costs": {k: v for k, v in costs.items()
+                          if k != "decode_flops"},
+        "traces": res,
+        "prefill_flops_per_request": flops,
+        "gates": gates,
     }
 
 
 def main(report):
-    cont = run_engine(gang=False)
-    gang = run_engine(gang=True)
-    # one shared wall conversion (min = least scheduler-noise estimate),
-    # so the requests/s comparison reflects scheduling, not CPU jitter
-    decode_s = min(cont["decode_step_ms"], gang["decode_step_ms"]) / 1e3
-    for s in (cont, gang):
-        scale = (s["decode_step_ms"] / 1e3) / decode_s
-        s["requests_per_s"] *= scale
-        s["ttft_p50_ms"] /= scale
-        s["ttft_p90_ms"] /= scale
-        s["decode_step_ms"] = 1e3 * decode_s
-    for name, s in (("continuous", cont), ("static_gang", gang)):
+    payload = run_all()
+    res, flops = payload["traces"], payload["prefill_flops_per_request"]
+    for name in ("chunked", "padded", "gang"):
+        s = res["main"][name]
         report(f"engine/{name}/requests_per_ksteps", 0.0,
                f"{s['requests_per_ksteps']:.1f}")
-        report(f"engine/{name}/requests_per_s", 0.0,
-               f"{s['requests_per_s']:.2f} (at {s['decode_step_ms']:.1f} "
-               "ms/step)")
         report(f"engine/{name}/ttft_p50_steps", 0.0,
-               f"{s['ttft_p50_steps']:.1f} ({s['ttft_p50_ms']:.0f} ms)")
-        report(f"engine/{name}/ttft_p90_steps", 0.0,
-               f"{s['ttft_p90_steps']:.1f} ({s['ttft_p90_ms']:.0f} ms)")
+               f"{s['ttft_p50_steps']:.1f} (p90 {s['ttft_p90_steps']:.1f})")
         report(f"engine/{name}/occupancy", 0.0, f"{s['occupancy']:.2f}")
-    speedup = cont["requests_per_ksteps"] / gang["requests_per_ksteps"]
-    report("engine/continuous_vs_static_speedup", 0.0, f"x{speedup:.2f}")
+        report(f"engine/{name}/wall_ms", s["wall_decode_ms"] * 1e3,
+               f"decode {s['wall_decode_ms']:.1f}ms "
+               f"prefill {s['wall_prefill_ms']:.1f}ms")
+    for name in ("chunked", "padded"):
+        s = res["short"][name]
+        report(f"engine/short/{name}/ttft_p50_steps", 0.0,
+               f"{s['ttft_p50_steps']:.1f}")
+        report(f"engine/short/{name}/prefill_mflops_per_req", 0.0,
+               f"{flops['short_' + name] / 1e6:.2f}")
+    g = payload["gates"]
+    report("engine/gate/short_prefill_flops_lower", 0.0,
+           str(g["short_prefill_flops_lower"]))
+    report("engine/gate/short_ttft_no_worse", 0.0,
+           str(g["short_ttft_no_worse"]))
+    report("engine/gate/chunked_vs_padded_ttft_no_worse", 0.0,
+           str(g["chunked_vs_padded_ttft_no_worse"]))
+    report("engine/continuous_vs_static_ttft_speedup", 0.0,
+           f"x{g['continuous_vs_gang_ttft_speedup']:.2f}")
+    report("engine/continuous_vs_static_speedup", 0.0,
+           f"x{g['continuous_vs_gang_speedup']:.2f}")
+    return payload
 
 
 if __name__ == "__main__":
+    import argparse
+    import json
     import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="where to write the engine-bench artifact")
+    args = ap.parse_args()
 
     def _report(name, us, derived=""):
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
 
-    main(_report)
+    payload = main(_report)
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {args.json}")
+    g = payload["gates"]
+    if not (g["short_prefill_flops_lower"] and g["short_ttft_no_worse"]
+            and g["chunked_vs_padded_ttft_no_worse"]):
+        sys.exit(1)

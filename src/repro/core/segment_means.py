@@ -38,6 +38,26 @@ def segment_bounds(n_p: int, L: int, offset: int = 0) -> tuple[np.ndarray, np.nd
     return starts + offset, ends - 1 + offset
 
 
+def segment_fill_counts(lo, hi, filled) -> jnp.ndarray:
+    """Per-segment count of *real* tokens once positions ``[0, filled)``
+    have been laid down.  ``lo``/``hi`` are the static inclusive
+    position bounds of each segment column (``segment_bounds``, or the
+    serving layout's global means grid); ``filled`` is a traced fill
+    level with any leading batch shape — the segment axis is appended
+    last.
+
+    Returns ``clip(min(filled, hi+1) - lo, 0, n_l)`` — the repeat
+    counts ``g`` a scaling-aware softmax must use so a mean over a
+    partially-filled (or padded) segment never weighs columns that hold
+    no real token.  Chunked prefill recomputes this every chunk; after
+    the final chunk it is exactly the per-request real-column count."""
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    filled = jnp.asarray(filled)[..., None]
+    return jnp.clip(jnp.minimum(filled, hi + 1) - lo, 0,
+                    None).astype(jnp.float32)
+
+
 def segment_means(x: jnp.ndarray, L: int) -> jnp.ndarray:
     """Compress ``x (..., N_p, D)`` to ``(..., L, D)`` segment means."""
     n_p = x.shape[-2]

@@ -65,16 +65,36 @@ def partial_softmax_stats(q, k, v, bias, scale):
 def merge_stats(a, b):
     """Combine two partial-stat triples over disjoint column sets —
     the associative flash-softmax merge (what lax.pmax/psum do across
-    shards, here across the local/means passes of one shard)."""
+    shards, here across the local/means passes of one shard).  Shape-
+    generic over the query count: m, l (B,Hq,Nq,1), acc (B,Nq,Hq,hd)
+    — the chunked-prefill pass merges Nq > 1 queries at once."""
     m_a, l_a, acc_a = a
     m_b, l_b, acc_b = b
     m = jnp.maximum(m_a, m_b)
     c_a = jnp.exp(m_a - m)
     c_b = jnp.exp(m_b - m)
     l = l_a * c_a + l_b * c_b
-    acc = (acc_a * c_a[:, :, 0, 0][:, None, :, None]
-           + acc_b * c_b[:, :, 0, 0][:, None, :, None])
+    acc = (acc_a * jnp.swapaxes(c_a[..., 0], 1, 2)[..., None]
+           + acc_b * jnp.swapaxes(c_b[..., 0], 1, 2)[..., None])
     return m, l, acc
+
+
+def chunk_softmax_stats(q, k, v, bias, scale):
+    """Multi-query softmax partial stats with a *per-query* additive
+    bias — the intra-chunk pass of chunked prefill (each chunk query
+    sees a different causal prefix of the chunk's own columns).
+
+    q (B,C,Hq,hd); k,v (B,M,Hkv,hd); bias (B,C,M) additive logits
+    (NEG = dead column).  Returns m, l: (B,Hq,C,1) f32 and
+    acc: (B,C,Hq,hd) f32 — merge_stats/``_combine_exact`` compatible."""
+    s = _gqa_logits(q, k, scale).astype(jnp.float32)      # (B,Hq,C,M)
+    s = s + bias[:, None].astype(jnp.float32)
+    m_p = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m_p)
+    p = jnp.where(s > NEG / 2, p, 0.0)                    # all-dead -> l=0
+    l_p = jnp.sum(p, axis=-1, keepdims=True)
+    acc_p = _gqa_output(p.astype(v.dtype), v).astype(jnp.float32)
+    return m_p, l_p, acc_p
 
 
 def decode_stats_reference(q, k, v, valid, log_gz=None, kz=None, vz=None,

@@ -6,8 +6,10 @@ already streaming through VMEM, so computing the means there saves a full
 HBM round-trip over a separate jnp.mean (see EXPERIMENTS.md §Perf).
 
 Grid (L, D/blk_d): each program mean-reduces one (segment × feature-block)
-tile.  Even segments only (N_p % L == 0) — the ragged tail uses the jnp
-path (`repro.core.segment_means`), which is also the kernel's oracle.
+tile.  Ragged partitions (N_p % L != 0) follow the paper's Eq. 8 split —
+the first L-1 even segments stream through the kernel, the oversized
+last segment is mean-reduced in jnp with one static slice (matching
+`repro.core.segment_means`, which is also the kernel's oracle).
 ``interpret=None`` auto-detects the platform (``kernels.dispatch``).
 """
 from __future__ import annotations
@@ -30,10 +32,20 @@ def _kernel(x_ref, o_ref, *, seg: int):
 @functools.partial(jax.jit, static_argnames=("L", "block_d", "interpret"))
 def segment_means_op(x, *, L: int, block_d: int = 512,
                      interpret: bool | None = None):
-    """x (B, N_p, D) -> (B, L, D); requires N_p % L == 0."""
+    """x (B, N_p, D) -> (B, L, D) segment means, any 1 <= L <= N_p."""
     interpret = default_interpret(interpret)
     b, n, d = x.shape
-    assert n % L == 0, "kernel path needs even segments; use jnp fallback"
+    assert 1 <= L <= n, (L, n)
+    if n % L:
+        # Eq. 8 ragged split: L-1 even segments + one oversized tail.
+        s = n // L
+        tail = jnp.mean(x[:, s * (L - 1):].astype(jnp.float32), axis=1,
+                        keepdims=True).astype(x.dtype)
+        if L == 1:
+            return tail
+        head = segment_means_op(x[:, : s * (L - 1)], L=L - 1,
+                                block_d=block_d, interpret=interpret)
+        return jnp.concatenate([head, tail], axis=1)
     seg = n // L
     block_d = min(block_d, d)
     if d % block_d:

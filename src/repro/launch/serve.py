@@ -48,6 +48,13 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--gang", action="store_true",
                     help="[engine] static-batching admission (baseline)")
+    ap.add_argument("--chunk-len", type=int, default=64,
+                    help="[engine] prefill chunk size (clamped to the "
+                         "prefill length)")
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=("chunked", "padded"),
+                    help="[engine] chunked prefill (default) or the "
+                         "legacy pad-to-length admission flush")
     args = ap.parse_args()
 
     import jax
@@ -85,7 +92,9 @@ def main():
         from repro.serving import SamplingParams, ServingEngine
         eng = ServingEngine(cfg, mesh, params, n_slots=args.batch,
                             prefill_len=n, max_cache=cap, hp=hp,
-                            prism=prism, gang=args.gang)
+                            prism=prism, gang=args.gang,
+                            chunk_len=args.chunk_len,
+                            prefill_mode=args.prefill_mode)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
                                              size=args.requests))

@@ -40,6 +40,18 @@ writes are owner-masked per row.  ``insert_cache_row`` splices a newly
 prefilled request into a free slot mid-flight; ``repro.serving`` builds
 the request-level engine on top of these primitives.
 
+Chunked prefill: ``make_chunk_prefill_step`` compiles ONE program that
+advances any subset of rows by up to ``chunk_len`` prompt tokens at
+per-row runtime offsets, writing K/V (and, in prism mode, the
+Segment-Means running state kz/vz/gz/zsum — over REAL columns only)
+straight into the decode-layout cache.  The engine interleaves these
+chunk calls with decode steps so long prompts no longer stall
+in-flight decodes, and short prompts stop paying a full ``prefill_len``
+pad-to-length forward.  Chunk attention is exact (flash-decode stats
+over the already-written prefix + a per-query intra-chunk pass, merged
+and psum-combined across shards), so engine output is token-identical
+to the monolithic prefill path.
+
 Kernel routing: every decode path funnels through ``decode_attention``
 below, which computes the per-shard partial softmax stats with the
 fused Pallas flash-decode kernel (``kernels/decode_attention.py``) or
@@ -65,9 +77,11 @@ from ..core.attention import (_gqa_logits, _gqa_output, log_repeats,
                               prism_attention)
 from ..core.masks import NEG_INF
 from ..core.protocol import PrismConfig
-from ..core.segment_means import segment_means, segment_sizes, segment_bounds
-from ..kernels.decode_attention import (decode_stats_reference,
-                                        flash_decode_stats)
+from ..core.segment_means import (segment_fill_counts, segment_means,
+                                  segment_sizes, segment_bounds)
+from ..kernels.decode_attention import (chunk_softmax_stats,
+                                        decode_stats_reference,
+                                        flash_decode_stats, merge_stats)
 from ..kernels.dispatch import pallas_interpret, use_pallas
 from ..kernels.ops import prism_attention_op
 from ..kernels.segment_means import segment_means_op
@@ -240,6 +254,12 @@ def layer_cache_shape(cfg: ModelConfig, kind: str, lay: ServeLayout,
             m = lay.n_seq * lay.L
             c["kz"] = ((batch, m, hkv, hd), dtype)
             c["vz"] = ((batch, m, hkv, hd), dtype)
+            # per-request means-column repeat counts (the g of Eq. 14:
+            # how many REAL tokens each kz/vz column averages; 0 = dead)
+            # and the running per-segment sums of the block-input
+            # activations that chunked prefill accumulates kz/vz from.
+            c["gz"] = ((batch, m), jnp.float32)
+            c["zsum"] = ((batch, m, cfg.d_model), jnp.float32)
         return c
     if kind == "attn_local":
         w = min(cfg.window or lay.cap, lay.cap)
@@ -266,6 +286,8 @@ def layer_cache_spec(kind: str, lay: ServeLayout, hp: ServeHParams):
         if hp.decode_mode == "prism":
             s["kz"] = P(b)
             s["vz"] = P(b)
+            s["gz"] = P(b)
+            s["zsum"] = P(b)
         return s
     if kind == "attn_local":
         return {"k": P(b), "v": P(b)}
@@ -337,6 +359,21 @@ def _write_slot(cache_kv, new_row, slot, owner):
     return cache_kv.at[rows, cols].set(upd)
 
 
+def _write_chunk(cache_kv, new_rows, slot, owner):
+    """Scatter a prefill chunk's (B,C,Hkv,hd) rows into per-request
+    cache slots at runtime offsets.  ``slot``/``owner`` are (B,C) —
+    every chunk token lands at its own column of its own shard.
+    Non-owner entries (wrong shard, dead token) are routed to an
+    out-of-range column and dropped by the scatter, so duplicate
+    in-range indices never occur (a request's chunk positions are
+    distinct) and the write stays O(B·C), independent of capacity."""
+    b, cap_l = cache_kv.shape[:2]
+    rows = jnp.arange(b)[:, None]
+    cols = jnp.where(owner, slot, cap_l)                  # OOB -> dropped
+    return cache_kv.at[rows, cols].set(
+        new_rows.astype(cache_kv.dtype), mode="drop")
+
+
 def decode_attention(q, k, v, valid, axes, scale, *, gz=None, kz=None,
                      vz=None, owner=None, mode="exact", backend="auto"):
     """Single entry point for per-token decode attention — every decode
@@ -377,21 +414,71 @@ def decode_attention(q, k, v, valid, axes, scale, *, gz=None, kz=None,
     return _combine_exact(m_p, l_p, acc_p, axes).astype(v.dtype)
 
 
+def chunk_attention(q, k, v, valid, bias_self, k_new, v_new, axes, scale,
+                    backend="auto"):
+    """Exact attention for one prefill chunk — the multi-query sibling
+    of ``decode_attention``.  Two disjoint column sets, two passes:
+
+      * **prior columns** — everything this request laid down before
+        the chunk (``valid (B,M)`` is col_pos < chunk offset, uniform
+        over the chunk's queries), so the single-token flash-decode
+        kernel applies verbatim with the C·Hq query heads folded into
+        the GQA head axis (KV-head-major, preserving the grouping);
+      * **the chunk itself** — the C just-projected K/V rows under a
+        per-query causal bias (``bias_self (B,C,C)``), a tiny dense
+        jnp pass (C ≪ cache capacity).
+
+    The two stat triples merge associatively and the cross-shard
+    pmax/psum combine keeps the result exact — chunked prefill is
+    token-identical to the monolithic prefill and to sequential decode.
+
+    q (B,C,Hq,hd); k,v (B,M,Hkv,hd) the local prefill-region shard;
+    k_new,v_new (B,C,Hkv,hd).  Returns (B,C,Hq,hd)."""
+    b, c, hq, hd = q.shape
+    hkv = k.shape[2]
+    grp = hq // hkv
+    # fold queries KV-head-major: index (kv, c, g) -> kernel's GQA map
+    # (head i attends kv head i // (c·grp)) stays correct
+    qf = (q.reshape(b, c, hkv, grp, hd).swapaxes(1, 2)
+          .reshape(b, 1, c * hq, hd))
+    if use_pallas(backend):
+        m1, l1, a1 = flash_decode_stats(qf, k, v, valid, scale=scale,
+                                        interpret=pallas_interpret())
+    else:
+        m1, l1, a1 = decode_stats_reference(qf, k, v, valid, scale=scale)
+
+    def unfold_stat(s):                       # (B, C·Hq, 1, 1)
+        s = s.reshape(b, hkv, c, grp)
+        return s.transpose(0, 1, 3, 2).reshape(b, hq, c)[..., None]
+
+    def unfold_acc(a):                        # (B, 1, C·Hq, hd)
+        a = a[:, 0].reshape(b, hkv, c, grp, hd)
+        return a.transpose(0, 2, 1, 3, 4).reshape(b, c, hq, hd)
+
+    stats_prior = (unfold_stat(m1), unfold_stat(l1), unfold_acc(a1))
+    stats_self = chunk_softmax_stats(q, k_new, v_new, bias_self, scale)
+    m_p, l_p, acc_p = merge_stats(stats_prior, stats_self)
+    return _combine_exact(m_p, l_p, acc_p, axes).astype(v.dtype)
+
+
 def _combine_exact(m_p, l_p, acc_p, axes):
     """Cross-shard flash-softmax stat combine: rescale each shard's
     (l, acc) to the global max, psum, normalize.  O(B·Hq·hd) traffic,
     independent of N.  Shards with no valid column (m = NEG) cancel via
     corr = 0; an all-shards-empty row lands on the 1e-30 clamp and
-    yields a finite zero."""
+    yields a finite zero.  Shape-generic over the query count Nq —
+    m, l (B,Hq,Nq,1), acc (B,Nq,Hq,hd) — so the chunked-prefill pass
+    combines a whole chunk of queries with the same primitive."""
     m_g = lax.pmax(m_p, axes) if axes else m_p
-    corr = jnp.exp(m_p - m_g)                             # (B,Hq,1,1)
+    corr = jnp.exp(m_p - m_g)                             # (B,Hq,Nq,1)
     l_c = l_p * corr
-    acc_c = acc_p * corr[:, :, 0, 0][:, None, :, None].astype(acc_p.dtype)
+    acc_c = acc_p * jnp.swapaxes(corr[..., 0], 1, 2)[..., None].astype(
+        acc_p.dtype)
     if axes:
         l_c = lax.psum(l_c, axes)
         acc_c = lax.psum(acc_c, axes)
-    denom = jnp.maximum(l_c[:, :, 0, 0], 1e-30)           # (B,Hq)
-    return acc_c / denom[:, None, :, None].astype(acc_c.dtype)
+    denom = jnp.maximum(l_c[..., 0], 1e-30)               # (B,Hq,Nq)
+    return acc_c / jnp.swapaxes(denom, 1, 2)[..., None].astype(acc_c.dtype)
 
 
 def flash_decode_combine(q, k, v, valid, axes, scale):
@@ -514,11 +601,22 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
         v_c = _write_slot(c["v"], v_new, slot, owner)
         valid = col_pos[None, :] <= pos[:, None]
         if hp.decode_mode == "prism" and "kz" in c:
-            _, hi, _, sizes, shard_of = _means_meta(lay)
+            # per-request repeat counts ride in the cache (written by
+            # the prefill that captured kz/vz, so they count REAL
+            # columns only — a short prompt's partially-filled segments
+            # carry their true token count, never pad columns).  The
+            # own shard is masked out (its columns are served exact),
+            # and a mean is visible only once every position it covers
+            # ([lo, lo+gz), prefix-contiguous by construction) is in
+            # the query's past — for chunked captures that always
+            # holds, for the legacy padded flush (gz = full sizes) it
+            # reduces to the old ``hi <= pos`` causal gating.
+            lo, _, _, _, shard_of = _means_meta(lay)
+            cnt = c["gz"]
             gz = jnp.where(
                 (jnp.asarray(shard_of)[None, :] != idx)
-                & (jnp.asarray(hi)[None, :] <= pos[:, None]),
-                jnp.asarray(sizes)[None, :], 0.0)
+                & (jnp.asarray(lo)[None, :] + cnt <= pos[:, None] + 1),
+                cnt, 0.0)
             out = decode_attention(
                 q, k_c, v_c, valid, lay.seq_axes, scale,
                 gz=gz, kz=c["kz"], vz=c["vz"], owner=owner,
@@ -694,11 +792,13 @@ def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
 # decode embedding / head
 # --------------------------------------------------------------------------
 
-def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
-                sharded_vocab):
-    """token (B,), pos (B,) -> x (B,1,D), replicated over the sequence
-    axes.  Positions are per request; idle slots (pos = -1) still embed
-    but never reach the cache (owner masking in the attention layers)."""
+def embed_tokens(cfg: ModelConfig, params, rules, token, pos, *,
+                 sharded_vocab):
+    """token (B,T), pos (B,T) -> x (B,T,D), replicated over the
+    sequence axes.  Positions are per request *and* per token (chunked
+    prefill feeds T = chunk_len tokens at per-row offsets); dead
+    entries (pos = -1) still embed but never reach the cache (owner
+    masking in the attention layers)."""
     table = params["embed"]["table"]
     if sharded_vocab:
         v_loc = table.shape[0]
@@ -706,25 +806,32 @@ def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
         t = token - vstart
         ok = (t >= 0) & (t < v_loc)
         e = jnp.take(table, jnp.clip(t, 0, v_loc - 1), axis=0)
-        x = lax.psum(jnp.where(ok[:, None], e, jnp.zeros_like(e)),
-                     "model")[:, None]
+        x = lax.psum(jnp.where(ok[..., None], e, jnp.zeros_like(e)),
+                     "model")
     else:
         table = gather_tree(params["embed"], rules["embed"])["table"]
-        x = jnp.take(table, token, axis=0)[:, None]
+        x = jnp.take(table, token, axis=0)
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     if cfg.pos == "learned":
         tbl = gather_tree(params["pos_embed"], rules["pos_embed"])["table"]
         safe = jnp.clip(pos, 0, tbl.shape[0] - 1)
-        x = x + jnp.take(tbl, safe, axis=0)[:, None].astype(x.dtype)
+        x = x + jnp.take(tbl, safe, axis=0).astype(x.dtype)
     elif cfg.pos == "sincos":
         half = cfg.d_model // 2
         freq = jnp.exp(-np.log(10000.0)
                        * jnp.arange(half, dtype=jnp.float32) / half)
-        ang = pos.astype(jnp.float32)[:, None] * freq      # (B, half)
+        ang = pos.astype(jnp.float32)[..., None] * freq    # (B,T,half)
         x = x + jnp.concatenate(
-            [jnp.sin(ang), jnp.cos(ang)], -1)[:, None].astype(x.dtype)
+            [jnp.sin(ang), jnp.cos(ang)], -1).astype(x.dtype)
     return x
+
+
+def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
+                sharded_vocab):
+    """Single-token decode form: token (B,), pos (B,) -> x (B,1,D)."""
+    return embed_tokens(cfg, params, rules, token[:, None], pos[:, None],
+                        sharded_vocab=sharded_vocab)
 
 
 # --------------------------------------------------------------------------
@@ -886,11 +993,12 @@ def prefill_attn(p, spec: AttnSpec, cfg: ModelConfig, x, ctx, lay,
             # means columns sit right after the local block in x_hat
             cache["kz"] = k[:, n_loc:n_loc + m]
             cache["vz"] = v[:, n_loc:n_loc + m]
+            z_all = akv.x_hat[:, n_loc:n_loc + m]
         else:                           # voltage prefill: compute means-KV
-            if use_pallas(hp.backend) and x.shape[1] % lay.L == 0:
+            if use_pallas(hp.backend):
                 z = segment_means_op(x, L=lay.L,
                                      interpret=pallas_interpret())
-            else:                       # ragged segments: jnp path
+            else:
                 z = segment_means(x, lay.L)
             zg = ctx._gather(z)
             b = x.shape[0]
@@ -900,6 +1008,16 @@ def prefill_attn(p, spec: AttnSpec, cfg: ModelConfig, x, ctx, lay,
                 p["attn"], spec, norm(p["ln1"], z_all, cfg.norm_kind),
                 jnp.asarray(mid, jnp.float32))
             cache["kz"], cache["vz"] = kz, vz
+        # monolithic prefill covers every position of [0, n0), so the
+        # per-request repeat counts are the full static segment sizes
+        # and the running sums are means × sizes (chunked prefill's
+        # invariant: zsum / gz == the mean each kz/vz row was cut from)
+        _, _, _, sizes, _ = _means_meta(lay)
+        b = x.shape[0]
+        cache["gz"] = jnp.broadcast_to(
+            jnp.asarray(sizes, jnp.float32)[None], (b, m))
+        cache["zsum"] = (z_all.astype(jnp.float32)
+                         * jnp.asarray(sizes, jnp.float32)[None, :, None])
     return ctx.finalize(o), cache
 
 
@@ -1052,3 +1170,206 @@ def make_prefill_step(cfg: ModelConfig, mesh, params, prism: PrismConfig,
         out_shardings=(sh(lspec), jax.tree.map(sh, cspecs)),
     )
     return jitted, lay, rules, lspec
+
+
+# --------------------------------------------------------------------------
+# chunked prefill
+# --------------------------------------------------------------------------
+
+def attn_chunk_prefill(p, spec: AttnSpec, cfg: ModelConfig, x, c, row_pos,
+                       off, lay: ServeLayout, hp: ServeHParams):
+    """Attention sublayer over one prefill chunk.
+
+    ``x`` (B,C,D) replicated over the sequence axes; ``row_pos`` (B,C)
+    global positions of the chunk tokens (-1 = dead: idle row or past
+    the row's remaining prompt); ``off`` (B,) the per-row chunk offset
+    (-1 = row not prefilling this call).  Writes the chunk's K/V rows
+    at their runtime offsets, attends *exactly* (prior columns via the
+    flash-decode stats path, the chunk itself via a per-query causal
+    pass, cross-shard stat combine), and in prism mode advances the
+    Segment-Means capture over REAL columns only — the running
+    per-segment sums ``zsum`` and counts ``gz`` ride in the cache, so
+    a short prompt's kz/vz never average pad columns."""
+    xn = norm(p["ln1"], x, cfg.norm_kind)
+    q = attn_project_q(p["attn"], spec, xn, row_pos)
+    k_new, v_new = attn_project_kv(p["attn"], spec, xn, row_pos)
+    scale = spec.head_dim ** -0.5
+
+    idx = _seq_index(lay.seq_axes)
+    slot, owner, col_pos = _decode_cols(lay, idx, row_pos)
+    k_c = _write_chunk(c["k"], k_new, slot, owner)
+    v_c = _write_chunk(c["v"], v_new, slot, owner)
+
+    # prior columns: everything before the chunk offset lives in the
+    # prefill-aligned region, so the static [0, n_loc0) slice of the
+    # shard suffices and validity is uniform over the chunk's queries
+    n_loc0 = lay.n_loc0
+    valid = col_pos[:n_loc0][None, :] < jnp.maximum(off, 0)[:, None]
+    # the chunk itself: causal over its own just-projected rows.  Each
+    # chunk column contributes on the ONE shard that owns its cache
+    # slot (a chunk may span a shard boundary) — the cross-shard psum
+    # then sums disjoint column sets, keeping the combine exact.
+    jj = jnp.arange(row_pos.shape[1])
+    alive = row_pos >= 0
+    bias_self = jnp.where(
+        (jj[None, None, :] <= jj[None, :, None])
+        & alive[:, :, None] & owner[:, None, :], 0.0, NEG_INF)
+    out = chunk_attention(q, k_c[:, :n_loc0], v_c[:, :n_loc0], valid,
+                          bias_self, k_new, v_new, lay.seq_axes, scale,
+                          backend=hp.backend)
+    new_c = dict(c, k=k_c, v=v_c)
+
+    if hp.decode_mode == "prism" and "kz" in c:
+        lo, hi, mid, _, _ = _means_meta(lay)
+        act = off >= 0                             # rows advanced this call
+        seg = ((jnp.asarray(lo)[None, None, :] <= row_pos[:, :, None])
+               & (row_pos[:, :, None] <= jnp.asarray(hi)[None, None, :]))
+        zsum = jnp.where((off == 0)[:, None, None], 0.0, c["zsum"])
+        zsum = zsum + jnp.einsum("bcm,bcd->bmd", seg.astype(jnp.float32),
+                                 x.astype(jnp.float32))
+        filled = jnp.maximum(off, 0) + alive.sum(axis=1)
+        cnt = segment_fill_counts(lo, hi, filled)  # (B, m) real columns
+        z = (zsum / jnp.maximum(cnt, 1.0)[..., None]).astype(x.dtype)
+        kz, vz = attn_project_kv(p["attn"], spec,
+                                 norm(p["ln1"], z, cfg.norm_kind),
+                                 jnp.asarray(mid, jnp.float32))
+        sel = act[:, None, None, None]
+        new_c["kz"] = jnp.where(sel, kz.astype(c["kz"].dtype), c["kz"])
+        new_c["vz"] = jnp.where(sel, vz.astype(c["vz"].dtype), c["vz"])
+        new_c["gz"] = jnp.where(act[:, None], cnt, c["gz"])
+        new_c["zsum"] = zsum
+
+    o = attn_output(p["attn"], out)
+    if cfg.parallel_block:
+        o = o + mlp(p["mlp"], xn, cfg.mlp_kind)
+    return o, new_c
+
+
+def block_chunk_prefill(cfg: ModelConfig, kind: str, p, shared, x, c,
+                        row_pos, off, lay: ServeLayout, hp: ServeHParams):
+    """One residual block over a prefill chunk.  Returns (x, new_cache).
+    Only position-addressed global-attention kinds are chunkable — the
+    same set the serving engine admits."""
+    if kind in ("attn", "moe"):
+        spec = T.attn_spec(cfg, kind)
+        o, c = attn_chunk_prefill(p, spec, cfg, x, c, row_pos, off,
+                                  lay, hp)
+        x = x + o
+        if cfg.parallel_block:
+            return x, c
+        if kind == "moe":
+            y, _ = moe_apply(p["moe"], norm(p["ln2"], x, cfg.norm_kind),
+                             cfg, DecodeMoeCtx(tp=hp.decode_tp))
+            x = x + y
+        elif cfg.d_ff:
+            x = x + mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_kind),
+                        cfg.mlp_kind)
+        return x, c
+    if kind == "shared_attn":
+        spec = T.attn_spec(cfg, "attn")
+        o, c = attn_chunk_prefill(shared, spec, cfg, x, c, row_pos, off,
+                                  lay, hp)
+        x = x + o
+        x = x + mlp(shared["mlp"], norm(shared["ln2"], x, cfg.norm_kind),
+                    cfg.mlp_kind)
+        return x, c
+    raise ValueError(
+        f"chunked prefill supports position-addressed attention caches "
+        f"only (got block kind {kind!r})")
+
+
+def make_chunk_prefill_step(cfg: ModelConfig, mesh, params, *,
+                            batch: int, cap: int, prefill_len: int,
+                            chunk_len: int,
+                            hp: ServeHParams = ServeHParams()):
+    """jitted (params, cache, tokens (B,C), off (B,), nreal (B,)) -> cache.
+
+    One compiled program advances every mid-prefill request by up to
+    ``chunk_len`` prompt tokens: row ``i``'s tokens land at global
+    positions ``[off[i], off[i] + nreal[i])`` of its cache row (idle
+    rows pass ``off = -1``), interleaved by the engine's scheduler with
+    single-token decode steps so long prompts never stall in-flight
+    decodes.  The cache has the DECODE layout (``cap``/``prefill_len``
+    as in ``make_serve_step``) — requests are admitted straight into
+    their decode slot, with no grow/insert round trip; stale columns
+    from a previous occupant are never visible because visibility
+    (``col_pos < off`` / ``col_pos <= pos``) only ever reaches columns
+    this request has already written.
+
+    Exactness: chunk queries attend with the full cross-shard stat
+    combine, so the written cache and any later decode are
+    token-identical to the monolithic prefill (the equivalence tests
+    pin this).  In prism decode mode the program additionally
+    accumulates the Segment-Means state (kz/vz/gz/zsum) over real
+    columns only.  Returns (jitted, layout, rules)."""
+    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len)
+    assert 1 <= chunk_len <= prefill_len, (chunk_len, prefill_len)
+    rules = param_specs(params, mesh, cfg.vocab_size)
+    pspecs = spec_tree(rules)
+    cspecs = cache_specs(cfg, lay, hp)
+    vocab_sharded = (rules["embed"]["table"].kind == "vocab")
+    shared_rules = rules.get("shared")
+    u, n_units, _ = cfg.scan_split
+    unit_kinds = cfg.block_kinds[:u]
+    for kind in cfg.block_kinds:
+        if kind not in ("attn", "moe", "shared_attn"):
+            raise ValueError(
+                f"chunked prefill needs position-addressed attention "
+                f"caches; arch {cfg.name!r} has block kind {kind!r}")
+
+    def body(params_local, cache_local, tokens, off, nreal):
+        j = jnp.arange(chunk_len)
+        alive = (off[:, None] >= 0) & (j[None, :] < nreal[:, None])
+        row_pos = jnp.where(alive, off[:, None] + j[None, :], -1)
+        x = embed_tokens(cfg, params_local, rules, tokens, row_pos,
+                         sharded_vocab=vocab_sharded)
+
+        def unit_body(x, xs):
+            p_sl, c_sl = xs
+            shared = (gather_tree(params_local["shared"], shared_rules)
+                      if shared_rules else None)
+            new = []
+            for k, kind in enumerate(unit_kinds):
+                p = gather_tree(p_sl[k], rules["scan"][k])
+                x, nc = block_chunk_prefill(cfg, kind, p, shared, x,
+                                            c_sl[k], row_pos, off, lay, hp)
+                new.append(nc)
+            return x, tuple(new)
+
+        x, new_stacks = lax.scan(
+            unit_body, x,
+            (tuple(params_local["scan"]), tuple(cache_local["scan"])))
+
+        new_tail = []
+        for t, tree in enumerate(params_local["tail"]):
+            kind = cfg.block_kinds[n_units * u + t]
+            p = gather_tree(tree, rules["tail"][t])
+            shared = (gather_tree(params_local["shared"], shared_rules)
+                      if shared_rules else None)
+            x, nc = block_chunk_prefill(cfg, kind, p, shared, x,
+                                        cache_local["tail"][t], row_pos,
+                                        off, lay, hp)
+            new_tail.append(nc)
+        # no logits: the engine's rewind re-feeds the last prompt token
+        # as the first decode step (idempotent K/V rewrite), which is
+        # what produces the teacher-forced next-token logits
+        return {"scan": list(new_stacks), "tail": new_tail}
+
+    body_sm = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, cspecs, P(lay.bspec, None), P(lay.bspec),
+                  P(lay.bspec)),
+        out_specs=cspecs,
+        check_vma=False)
+
+    sh = functools.partial(NamedSharding, mesh)
+    jitted = jax.jit(
+        body_sm,
+        in_shardings=(jax.tree.map(sh, pspecs),
+                      jax.tree.map(sh, cspecs),
+                      sh(P(lay.bspec, None)), sh(P(lay.bspec)),
+                      sh(P(lay.bspec))),
+        out_shardings=jax.tree.map(sh, cspecs),
+        donate_argnums=(1,),
+    )
+    return jitted, lay, rules

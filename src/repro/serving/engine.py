@@ -2,41 +2,49 @@
 
 Request lifecycle (docs/serving.md has the full tour)::
 
-    submit ──> [FIFO queue] ──> prefill (batched, right-padded to
-    prefill_len) ──> grow_cache to decode capacity ──> insert_cache_row
-    into a free slot ──> per-slot decode (pos vector; idle rows carry
-    pos = -1) ──> host-side sampling ──> evict on EOS / max-tokens ──>
-    slot freed for the next arrival, mid-flight.
+    submit ──> [FIFO queue] ──> admit into a free slot (host-side)
+    ──> CHUNKED PREFILL: the prompt lands chunk_len tokens at a time,
+    written straight into the slot's decode-cache row at its true
+    offsets, interleaved with decode steps (at most one chunk per
+    decode_per_prefill decode steps while streams are decoding) ──>
+    rewind to pos = len(prompt) - 1 ──> per-slot decode (pos vector;
+    idle/prefilling rows carry pos = -1) ──> host-side sampling ──>
+    evict on EOS / max-tokens ──> slot freed, mid-flight.
 
-The engine owns exactly three compiled programs, each traced once:
+The engine owns exactly two compiled programs, each traced once:
 
-  * ``prefill``  — batch = n_slots, length = prefill_len.  An admission
-    *flush* packs every admitted request into one prefill call (rows
-    beyond the admitted count carry dummy pad prompts and are never
-    inserted), so admission cost amortises over bursts.
+  * ``chunk``    — batch = n_slots, up to chunk_len prompt tokens per
+    row at per-row runtime offsets (rows not prefilling pass
+    offset = -1).  EVERY mid-prefill request advances in the same
+    call, so admission cost amortises over bursts and a long prompt
+    is spread over many cheap steps instead of one monolithic flush —
+    in-flight decodes keep their bounded share of the engine
+    (chunk-vs-decode interleave), and a short prompt pays
+    ceil(len/chunk_len) chunks instead of a full pad-to-prefill_len
+    forward.
   * ``step``     — batch = n_slots single-token decode with a (B,) pos
     vector: every request decodes at its own depth.
-  * ``insert``   — ``insert_cache_row`` with donated destination,
-    row indices passed as arrays so slot choice never retraces.
 
-Short prompts and the admission rewind: prompts are right-padded to
-``prefill_len``.  Causality makes every *real* prompt row of the
-prefilled KV cache exact (pad columns sit strictly to the right), but
-the prefill's returned last-token logits belong to a pad column, so the
-engine discards them and instead starts the slot at
-``pos = len(prompt) - 1``, re-feeding the last real prompt token.  That
-first decode step rewrites the token's K/V row in place (the layout's
-``p = n0 - 1`` degenerate case) and yields exactly the teacher-forced
-next-token logits; pad columns beyond ``pos`` stay masked
-(``col_pos <= pos``) until real decoded tokens overwrite them.  TTFT is
-measured to the first token sampled from those logits.
+The admission rewind: the chunk program returns no logits; when the
+last chunk lands, the slot starts decoding at ``pos = len(prompt) - 1``,
+re-feeding the last prompt token.  That first decode step rewrites the
+token's K/V row in place (an idempotent rewrite — the computation is
+identical to the chunk's) and yields exactly the teacher-forced
+next-token logits.  TTFT is measured to the first token sampled from
+those logits.  Chunk attention is exact (cross-shard stat combine), so
+engine output is token-identical to sequential serving in every mode.
 
-In ``prism`` decode mode the Segment-Means cache rows (kz/vz) are
-captured from the padded prefill, so for short prompts the remote-means
-approximation also averages pad columns — acceptable for an
-approximate mode, but prefer ``exact`` when prompts are much shorter
-than ``prefill_len``.  The engine-vs-sequential equivalence holds in
-both modes because both paths run the identical computation.
+In ``prism`` decode mode the chunk program also accumulates the
+Segment-Means state (kz/vz + per-request counts gz + running sums
+zsum) over REAL prompt columns only — short prompts no longer fold pad
+columns into the remote-means approximation, which the padded flush
+admission used to do (the old wart, kept reproducible via
+``prefill_mode='padded'``).
+
+``prefill_mode='padded'`` retains the legacy three-program admission
+(right-pad to ``prefill_len``, one monolithic flush, ``grow_cache`` +
+``insert_cache_row`` into the slot) as the benchmark baseline and as a
+fallback; docs/serving.md quantifies the difference.
 """
 from __future__ import annotations
 
@@ -53,7 +61,8 @@ from ..core.protocol import PrismConfig
 from ..models.config import ModelConfig
 from ..runtime.serve import (ServeHParams, cache_specs, grow_cache,
                              init_cache, insert_cache_row,
-                             make_prefill_step, make_serve_step)
+                             make_chunk_prefill_step, make_prefill_step,
+                             make_serve_step)
 from .sampling import SamplingParams, sample_token
 from .scheduler import EngineStats, FifoScheduler, Request
 
@@ -67,7 +76,11 @@ class ServingEngine:
                  hp: ServeHParams = ServeHParams(),
                  prism: PrismConfig | None = None,
                  decode_per_prefill: int = 4, gang: bool = False,
+                 chunk_len: int = 64, prefill_mode: str = "chunked",
                  pad_id: int = 0, clock=time.monotonic):
+        if prefill_mode not in ("chunked", "padded"):
+            raise ValueError(f"prefill_mode {prefill_mode!r} not in "
+                             "('chunked', 'padded')")
         if prism is None:
             prism = PrismConfig(
                 P=1, cr=hp.means_cr,
@@ -98,26 +111,39 @@ class ServingEngine:
                 f"frontend={cfg.frontend!r}) needs embedding inputs")
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.n_slots, self.prefill_len = n_slots, prefill_len
+        self.prefill_mode = prefill_mode
+        self.chunk_len = max(1, min(chunk_len, prefill_len))
         self.pad_id, self._clock = pad_id, clock
 
-        # (make_prefill_step re-derives PrismConfig.P from the layout's
-        # n_seq; only the mode/cr fields of ``prism`` matter here)
-        self._prefill, lay_p, _, _ = make_prefill_step(
-            cfg, mesh, params, prism, batch=n_slots, n=prefill_len, hp=hp)
         self._step, lay_d, _, _ = make_serve_step(
             cfg, mesh, params, batch=n_slots, cap=max_cache,
             prefill_len=prefill_len, hp=hp)
-        assert lay_p.n_seq == lay_d.n_seq, (lay_p, lay_d)
         self.layout = lay_d
         # pin the decode-layout cache sharding on every path that feeds
         # the step function (its donated args reject resharding)
         cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
                                 cache_specs(cfg, lay_d, hp))
-        self._grow = jax.jit(
-            functools.partial(grow_cache, lay_from=lay_p, lay_to=lay_d),
-            out_shardings=cache_sh)
-        self._insert = jax.jit(insert_cache_row, donate_argnums=(0,),
-                               out_shardings=cache_sh)
+        if prefill_mode == "chunked":
+            # ONE chunk program writes straight into the decode cache
+            # at runtime offsets — no prefill-layout cache, no grow, no
+            # insert round trip
+            self._chunk, lay_c, _ = make_chunk_prefill_step(
+                cfg, mesh, params, batch=n_slots, cap=max_cache,
+                prefill_len=prefill_len, chunk_len=self.chunk_len, hp=hp)
+            assert lay_c == lay_d, (lay_c, lay_d)
+        else:
+            # legacy padded admission: monolithic flush + grow + insert
+            # (make_prefill_step re-derives PrismConfig.P from the
+            # layout's n_seq; only mode/cr of ``prism`` matter here)
+            self._prefill, lay_p, _, _ = make_prefill_step(
+                cfg, mesh, params, prism, batch=n_slots, n=prefill_len,
+                hp=hp)
+            assert lay_p.n_seq == lay_d.n_seq, (lay_p, lay_d)
+            self._grow = jax.jit(
+                functools.partial(grow_cache, lay_from=lay_p, lay_to=lay_d),
+                out_shardings=cache_sh)
+            self._insert = jax.jit(insert_cache_row, donate_argnums=(0,),
+                                   out_shardings=cache_sh)
         self._cache = jax.device_put(init_cache(cfg, lay_d, n_slots, hp),
                                      cache_sh)
 
@@ -182,36 +208,30 @@ class ServingEngine:
     # one engine iteration
     # ------------------------------------------------------------------
     def step(self) -> str:
-        """Run one scheduler decision: a prefill flush, a decode step,
-        or nothing ('idle').  Returns which."""
+        """Run one scheduler decision: a prefill chunk (padded mode: an
+        admission flush), a decode step, or nothing ('idle').  Returns
+        which."""
         sch = self._sched
         self._release_arrivals()
         if self.stats.t_start is None:
             self.stats.t_start = self.now()
 
-        if sch.want_prefill():
-            batch = np.full((self.n_slots, self.prefill_len), self.pad_id,
-                            np.int32)
-            states = sch.admit(self.now())
-            for i, st in enumerate(states):
-                batch[i, :len(st.req.prompt)] = st.req.prompt
-            _, fresh = self._prefill(self.params, {"tokens":
-                                                   jnp.asarray(batch)})
-            grown = self._grow(fresh)
-            for i, st in enumerate(states):
-                self._cache = self._insert(self._cache, grown,
-                                           jnp.asarray(i, jnp.int32),
-                                           jnp.asarray(st.slot, jnp.int32))
-            self.stats.prefills += 1
-            self.stats.t_end = self.now()
-            return "prefill"
+        if self.prefill_mode == "padded":
+            if sch.want_prefill():
+                return self._padded_flush()
+        else:
+            if sch.want_admit():
+                sch.admit(self.now())      # host-side: assign slots only
+            if sch.want_chunk():
+                return self._chunk_step()
 
-        if sch.active:
+        decoding = sch.decoding()
+        if decoding:
             tok = np.zeros(self.n_slots, np.int32)
             pos = np.full(self.n_slots, -1, np.int32)
-            for slot, st in sch.active.items():
-                tok[slot] = st.next_token
-                pos[slot] = st.pos
+            for st in decoding:
+                tok[st.slot] = st.next_token
+                pos[st.slot] = st.pos
             t0 = self.now()
             logits, self._cache = self._step(
                 self.params, self._cache, jnp.asarray(tok), jnp.asarray(pos))
@@ -220,8 +240,8 @@ class ServingEngine:
             self.stats.step_latency.append(now - t0)
             self.stats.occupancy.append(len(sch.active) / self.n_slots)
             self.stats.decode_steps += 1
-            for slot, st in list(sch.active.items()):
-                t = sample_token(rows[slot], st.req.sampling, st.rng)
+            for st in decoding:
+                t = sample_token(rows[st.slot], st.req.sampling, st.rng)
                 st.generated.append(t)
                 self.stats.generated_tokens += 1
                 if st.ttft is None:
@@ -237,6 +257,58 @@ class ServingEngine:
             self.stats.t_end = self.now()
             return "decode"
         return "idle"
+
+    def _chunk_step(self) -> str:
+        """Advance EVERY mid-prefill request by one chunk (each at its
+        own offset) in a single compiled call."""
+        sch = self._sched
+        c = self.chunk_len
+        tokens = np.full((self.n_slots, c), self.pad_id, np.int32)
+        off = np.full(self.n_slots, -1, np.int32)
+        nreal = np.zeros(self.n_slots, np.int32)
+        states = sch.prefilling()
+        for st in states:
+            take = min(c, len(st.req.prompt) - st.nprefilled)
+            tokens[st.slot, :take] = st.req.prompt[
+                st.nprefilled:st.nprefilled + take]
+            off[st.slot] = st.nprefilled
+            nreal[st.slot] = take
+        self._cache = self._chunk(self.params, self._cache,
+                                  jnp.asarray(tokens), jnp.asarray(off),
+                                  jnp.asarray(nreal))
+        for st in states:
+            st.nprefilled += int(nreal[st.slot])
+            if not st.prefilling:
+                st.begin_decode()          # rewind: re-feed last token
+        sch.note_chunk()
+        self.stats.prefills += 1
+        self.stats.prefill_chunks += 1
+        self.stats.prefill_tokens += int(nreal.sum())
+        self.stats.t_end = self.now()
+        return "prefill"
+
+    def _padded_flush(self) -> str:
+        """Legacy admission: right-pad every admitted prompt to
+        ``prefill_len``, one monolithic prefill, grow + splice each row
+        into its slot, start decoding at the rewind position."""
+        sch = self._sched
+        batch = np.full((self.n_slots, self.prefill_len), self.pad_id,
+                        np.int32)
+        states = sch.admit(self.now())
+        for i, st in enumerate(states):
+            batch[i, :len(st.req.prompt)] = st.req.prompt
+        _, fresh = self._prefill(self.params, {"tokens":
+                                               jnp.asarray(batch)})
+        grown = self._grow(fresh)
+        for i, st in enumerate(states):
+            self._cache = self._insert(self._cache, grown,
+                                       jnp.asarray(i, jnp.int32),
+                                       jnp.asarray(st.slot, jnp.int32))
+            st.begin_decode()
+            self.stats.prefill_tokens += len(st.req.prompt)
+        self.stats.prefills += 1
+        self.stats.t_end = self.now()
+        return "prefill"
 
     # ------------------------------------------------------------------
     # drive to completion

@@ -1,14 +1,22 @@
 """Request-level scheduling for the continuous-batching engine.
 
-FIFO admission over a fixed pool of decode slots, with a
-prefill/decode interleave knob: once streams are decoding, at most one
-prefill *flush* (which admits up to every free slot at once) per
-``decode_per_prefill`` decode steps, so a burst of arrivals cannot
-starve running streams of decode bandwidth.  An idle engine (nothing
-decoding) always prefills immediately — there is no decode work to
-protect, and TTFT is all that matters.
+FIFO admission over a fixed pool of decode slots.  Admission assigns a
+slot immediately (it is host-side bookkeeping); the prompt is then
+*prefilled in chunks*, and the scheduler interleaves chunk steps with
+decode steps: once streams are decoding, at most one chunk per
+``decode_per_prefill`` decode steps, so a long prompt (or a burst of
+arrivals) can never starve running streams of decode bandwidth for
+more than a bounded number of steps.  An engine with nothing decoding
+always chunks immediately — there is no decode work to protect, and
+TTFT is all that matters.  All mid-prefill rows advance *together* in
+one batched chunk call (each at its own offset), so concurrent
+admissions don't serialize.
 
-``gang=True`` degrades the policy to classic *static batching* — admit
+The legacy ``padded`` engine mode still uses the all-or-nothing policy
+(``want_prefill``): one whole pad-to-``prefill_len`` flush per
+``decode_per_prefill`` decode steps.
+
+``gang=True`` degrades admission to classic *static batching* — admit
 only into an empty pool, then drain it completely — which is the
 baseline the engine-throughput benchmark compares against.
 """
@@ -35,27 +43,41 @@ class Request:
 class RequestState:
     """Mutable per-request serving state while a request owns a slot.
 
-    The admission *rewind*: prompts are right-padded to the engine's
-    ``prefill_len``, so the prefill's last-token logits belong to a pad
-    column.  The slot therefore starts at ``pos = len(prompt) - 1`` and
-    re-feeds the final prompt token: the decode step rewrites that K/V
-    row in place (the layout's p = n0-1 degenerate case) and returns the
-    exact teacher-forced next-token logits.  Everything past ``pos`` is
+    A request starts in the *prefill* phase: ``nprefilled`` counts the
+    prompt tokens already laid down (the engine advances it one chunk
+    at a time; the legacy padded mode jumps it to the full length in
+    one flush).  ``begin_decode`` performs the *rewind* to the decode
+    phase: the slot starts at ``pos = len(prompt) - 1`` and re-feeds
+    the final prompt token — the first decode step rewrites that K/V
+    row in place (an idempotent rewrite: chunked prefill already wrote
+    it, and the computation is identical) and returns the exact
+    teacher-forced next-token logits.  Everything past ``pos`` is
     invisible (``col_pos <= pos``) until real decoded tokens land there.
     """
-    __slots__ = ("req", "slot", "pos", "next_token", "generated", "rng",
-                 "t_admit", "ttft", "t_finish")
+    __slots__ = ("req", "slot", "pos", "next_token", "nprefilled",
+                 "generated", "rng", "t_admit", "ttft", "t_finish")
 
     def __init__(self, req: Request, slot: int, t_admit: float):
         self.req = req
         self.slot = slot
-        self.pos = len(req.prompt) - 1
-        self.next_token = int(req.prompt[-1])
+        self.pos = -1                  # decode position; -1 while prefilling
+        self.next_token = None
+        self.nprefilled = 0            # prompt tokens laid down so far
         self.generated: list = []
         self.rng = req.sampling.make_rng()
         self.t_admit = t_admit
         self.ttft = None
         self.t_finish = None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.nprefilled < len(self.req.prompt)
+
+    def begin_decode(self):
+        """Prefill done — rewind to the last prompt token and decode."""
+        self.nprefilled = len(self.req.prompt)
+        self.pos = len(self.req.prompt) - 1
+        self.next_token = int(self.req.prompt[-1])
 
     def finished(self) -> bool:
         if len(self.generated) >= self.req.max_new_tokens:
@@ -82,7 +104,9 @@ class EngineStats:
         default_factory=lambda: deque(maxlen=STATS_WINDOW))
     occupancy: deque = field(                          # active/slots per step
         default_factory=lambda: deque(maxlen=STATS_WINDOW))
-    prefills: int = 0
+    prefills: int = 0                  # prefill program calls (flush/chunk)
+    prefill_chunks: int = 0            # chunked-mode calls among them
+    prefill_tokens: int = 0            # REAL prompt tokens laid down
     decode_steps: int = 0
     completed: int = 0
     generated_tokens: int = 0
@@ -108,6 +132,8 @@ class EngineStats:
             "occupancy": (float(np.mean(self.occupancy))
                           if self.occupancy else 0.0),
             "prefills": self.prefills,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens": self.prefill_tokens,
             "decode_steps": self.decode_steps,
         }
 
@@ -135,21 +161,59 @@ class FifoScheduler:
     def has_work(self) -> bool:
         return bool(self.queue or self.active)
 
+    # -- views -------------------------------------------------------------
+    def prefilling(self) -> list:
+        """Mid-prefill RequestStates, ascending slot order."""
+        return [st for _, st in sorted(self.active.items())
+                if st.prefilling]
+
+    def decoding(self) -> list:
+        """Decode-phase RequestStates, ascending slot order."""
+        return [st for _, st in sorted(self.active.items())
+                if not st.prefilling]
+
     # -- policy ------------------------------------------------------------
+    def _gang_ready(self) -> bool:
+        """Static batching admits only a full gang into an EMPTY pool
+        (or the drain-time remainder once no more arrivals come)."""
+        return not self.active and (len(self.queue) >= self.n_slots
+                                    or self.drain)
+
+    def want_admit(self) -> bool:
+        """Chunked mode: admission is host-side bookkeeping (assign a
+        slot, start chunking under the interleave policy), so it is
+        never rate-limited — except in gang mode."""
+        if not self.queue or not self.free_slots:
+            return False
+        return self._gang_ready() if self.gang else True
+
+    def want_chunk(self) -> bool:
+        """Run a prefill chunk now?  Always when nothing is decoding;
+        otherwise at most one chunk per ``decode_per_prefill`` decode
+        steps — the bound on how long a long prompt can hold decode
+        bandwidth away from running streams."""
+        if not any(st.prefilling for st in self.active.values()):
+            return False
+        if not any(not st.prefilling for st in self.active.values()):
+            return True
+        return self._decodes_since_prefill >= self.decode_per_prefill
+
     def want_prefill(self) -> bool:
+        """Legacy padded mode: admit + full pad-to-length flush as one
+        all-or-nothing step, same interleave bound."""
         if not self.queue or not self.free_slots:
             return False
         if self.gang:
-            # static batching: only gang-admit into an EMPTY pool, and
-            # only once a full gang is queued (or no more arrivals).
-            return not self.active and (len(self.queue) >= self.n_slots
-                                        or self.drain)
+            return self._gang_ready()
         if not self.active:
             return True
         return self._decodes_since_prefill >= self.decode_per_prefill
 
     def note_decode(self):
         self._decodes_since_prefill += 1
+
+    def note_chunk(self):
+        self._decodes_since_prefill = 0
 
     # -- transitions -------------------------------------------------------
     def admit(self, now: float) -> list:

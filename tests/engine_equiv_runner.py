@@ -1,12 +1,17 @@
 """Standalone runner: the continuous-batching engine on a (2,4) mesh —
 6 staggered requests through 4 slots must terminate with exactly the
 tokens one-at-a-time serving produces, in BOTH decode modes (exact
-flash-decoding and the paper-faithful prism Segment-Means cache).
+flash-decoding and the paper-faithful prism Segment-Means cache) and
+with the prompt split across MULTIPLE prefill chunks (chunk_len <
+prompt length), so chunk steps of different requests interleave with
+decodes mid-flight.
 
-Both paths run the identical per-row computation (prefill rows are
+Both paths run the identical per-row computation (chunk rows are
 batch-independent, decode rows are owner-masked), so greedy token ids
-match bit-for-bit regardless of which slot a request lands in or which
-other requests share the step.
+match bit-for-bit regardless of which slot a request lands in, which
+other requests share the step, or how its prompt was chunked.  Exact
+mode is additionally pinned against a teacher-forced ``T.forward``
+oracle that shares none of the serving code.
 """
 import os
 import sys
@@ -16,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models import transformer as T
@@ -23,23 +29,27 @@ from repro.runtime.serve import ServeHParams
 from repro.serving import ServingEngine
 
 
-def check(mode: str) -> bool:
-    cfg = ModelConfig(
-        name="tiny-dense", arch_type="dense", n_layers=2, d_model=64,
-        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64,
-        mlp_kind="swiglu", norm_kind="rmsnorm", pos="rope",
-        tie_embeddings=True)
+CFG = ModelConfig(
+    name="tiny-dense", arch_type="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64,
+    mlp_kind="swiglu", norm_kind="rmsnorm", pos="rope",
+    tie_embeddings=True)
+
+
+def check(mode: str, chunk_len: int, *, ground_truth: bool = False) -> bool:
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    params = T.init(cfg, jax.random.PRNGKey(0))
+    params = T.init(CFG, jax.random.PRNGKey(0))
     hp = ServeHParams(decode_mode=mode, ssm_chunk=8, means_cr=4.0)
-    kw = dict(n_slots=4, prefill_len=32, max_cache=48, hp=hp)
+    kw = dict(n_slots=4, prefill_len=32, max_cache=48, hp=hp,
+              chunk_len=chunk_len)
+    tag = f"{mode}/c{chunk_len}"
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(1, cfg.vocab_size,
+    prompts = [rng.integers(1, CFG.vocab_size,
                             size=int(rng.integers(8, 33))).tolist()
                for _ in range(6)]
 
-    eng = ServingEngine(cfg, mesh, params, **kw)
+    eng = ServingEngine(CFG, mesh, params, **kw)
     for p in prompts[:4]:
         eng.submit(p, max_new_tokens=8)
     for _ in range(4):                       # decode before late arrivals
@@ -48,25 +58,45 @@ def check(mode: str) -> bool:
         eng.submit(p, max_new_tokens=8)
     concurrent = eng.run()
 
-    seq = ServingEngine(cfg, mesh, params, **kw)
+    seq = ServingEngine(CFG, mesh, params, **kw)
     ok = True
     for i, p in enumerate(prompts):
         rid = seq.submit(p, max_new_tokens=8)
         out = seq.run()[rid]
         match = concurrent[i] == out
         ok &= match
-        print(f"[{mode}] request {i}: {'OK' if match else 'MISMATCH'} "
+        print(f"[{tag}] request {i}: {'OK' if match else 'MISMATCH'} "
               f"{concurrent[i]} vs {out}")
     s = eng.stats.summary()
     ok &= eng.stats.completed == 6 and s["occupancy"] > 0
-    print(f"[{mode}] occupancy={s['occupancy']:.2f} "
-          f"prefills={s['prefills']} decode_steps={s['decode_steps']}")
+    if chunk_len < 32:
+        # prompts of 8..32 tokens at chunk_len < 8 must take > 1 chunk
+        ok &= s["prefill_chunks"] > 6
+    print(f"[{tag}] occupancy={s['occupancy']:.2f} "
+          f"prefills={s['prefills']} chunks={s['prefill_chunks']} "
+          f"prefill_tokens={s['prefill_tokens']} "
+          f"decode_steps={s['decode_steps']}")
+
+    if ground_truth:
+        # exact mode only: pin against teacher-forced full forward
+        for i in (0, 1):
+            toks = list(prompts[i])
+            for _ in range(8):
+                logits, _ = T.forward(CFG, params, jnp.asarray([toks]),
+                                      chunk=8)
+                toks.append(int(np.argmax(np.asarray(logits[0, -1]))))
+            want = toks[len(prompts[i]):]
+            match = concurrent[i] == want
+            ok &= match
+            print(f"[{tag}] request {i} vs T.forward: "
+                  f"{'OK' if match else 'MISMATCH'}")
     return ok
 
 
 def main():
-    ok = check("exact")
-    ok &= check("prism")
+    ok = check("exact", 64)                # clamps to prefill_len: 1 flush
+    ok &= check("exact", 8, ground_truth=True)   # 1-4 chunks per prompt
+    ok &= check("prism", 8)
     print("ALL OK" if ok else "ENGINE FAILURES")
     sys.exit(0 if ok else 1)
 

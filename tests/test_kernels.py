@@ -128,6 +128,18 @@ def test_segment_means_kernel(b, n, L, d):
                                atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("b,n,L,d", [(1, 17, 4, 8), (2, 100, 16, 64),
+                                     (1, 7, 3, 128), (1, 9, 1, 16)])
+def test_segment_means_kernel_ragged(b, n, L, d):
+    """N_p % L != 0: the kernel streams the L-1 even segments and
+    jnp-reduces the oversized tail — must equal the jnp oracle."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, n, d))
+    got = segment_means_op(x, L=L, block_d=min(512, d), interpret=True)
+    want = segment_means(x, L)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
 @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
 def test_segment_means_kernel_dtype(dtype):
     x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 64)).astype(dtype)

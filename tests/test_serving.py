@@ -78,6 +78,69 @@ def test_scheduler_eviction_recycles_lowest_slot():
     assert states[1].t_finish == 1.0
 
 
+def test_scheduler_chunk_interleave_fairness():
+    """A long prompt mid-prefill can never starve decoding slots: while
+    anything is decoding, chunks are granted at most once per
+    ``decode_per_prefill`` decode steps — never back-to-back."""
+    s = FifoScheduler(4, decode_per_prefill=3)
+    s.submit(_req(0))
+    s.admit(now=0.0)[0].begin_decode()             # a running stream
+    s.submit(_req(1, prompt=tuple(range(1, 33))))  # long prompt
+    assert s.want_admit()
+    s.admit(now=0.0)
+    assert s.prefilling() and s.decoding()
+    grants = []
+    for _ in range(12):                            # drive the policy
+        if s.want_chunk():
+            grants.append("chunk")
+            s.note_chunk()
+        else:
+            grants.append("decode")
+            s.note_decode()
+    # never two chunks in a row, and >= decode_per_prefill decodes
+    # between consecutive chunk grants
+    last = None
+    for i, g in enumerate(grants):
+        if g == "chunk":
+            if last is not None:
+                assert i - last > 3, grants
+            last = i
+    assert grants.count("chunk") >= 2              # prefill does advance
+
+    # nothing decoding -> chunks run back-to-back (TTFT is all that
+    # matters for an otherwise-idle engine)
+    s2 = FifoScheduler(2, decode_per_prefill=3)
+    s2.submit(_req(0, prompt=tuple(range(1, 20))))
+    s2.admit(now=0.0)
+    assert s2.want_chunk()
+    s2.note_chunk()
+    assert s2.want_chunk()
+
+
+def test_scheduler_want_admit_gang_vs_fifo():
+    """Chunked admission is host-side and immediate in FIFO mode, but
+    gang mode still only admits a full gang into an empty pool."""
+    s = FifoScheduler(2)
+    s.submit(_req(0))
+    assert s.want_admit()                          # free slot + queue
+    s.admit(now=0.0)[0].begin_decode()
+    s.submit(_req(1))
+    assert s.want_admit()                          # decode never blocks it
+
+    g = FifoScheduler(2, gang=True)
+    g.submit(_req(0))
+    assert not g.want_admit()                      # waits for a full gang
+    g.submit(_req(1))
+    assert g.want_admit()
+    states = g.admit(now=0.0)
+    g.submit(_req(2))
+    assert not g.want_admit()                      # pool busy
+    g.evict(states[0], now=1.0)
+    g.evict(states[1], now=1.0)
+    g.drain = True
+    assert g.want_admit()                          # drain-time remainder
+
+
 def test_scheduler_gang_is_static_batching():
     s = FifoScheduler(2, gang=True)
     s.submit(_req(0))
@@ -254,6 +317,44 @@ def test_engine_eos_and_max_tokens_evict():
     rid1 = eng2.submit([5, 6, 7], max_new_tokens=4, eos_id=out0[0])
     out1 = eng2.run()[rid1]
     assert out1 == [out0[0]]
+
+
+def test_engine_eviction_mid_prefill():
+    """A decoding request finishes and is evicted WHILE another request
+    is mid-prefill; a third request is admitted into the freed slot and
+    its chunks interleave — everything still matches sequential
+    serving."""
+    mesh = _mesh()
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    pa = rng.integers(1, TINY.vocab_size, size=3).tolist()
+    pb = rng.integers(1, TINY.vocab_size, size=8).tolist()   # 4 chunks
+    pc = rng.integers(1, TINY.vocab_size, size=5).tolist()
+
+    kw = dict(n_slots=2, prefill_len=8, max_cache=24, chunk_len=2,
+              decode_per_prefill=1)
+    eng = _engine(params, mesh, **kw)
+    ra = eng.submit(pa, max_new_tokens=2)
+    while not eng._sched.decoding():               # finish A's prefill
+        eng.step()
+    rb = eng.submit(pb, max_new_tokens=4)
+    saw_mid_prefill_evict = False
+    while eng._sched.has_work:
+        eng.step()
+        if (ra in eng._results and eng._sched.prefilling()):
+            saw_mid_prefill_evict = True
+            break
+    assert saw_mid_prefill_evict                   # A gone, B mid-prefill
+    rc = eng.submit(pc, max_new_tokens=3)
+    out = eng.run()
+    assert set(out) == {ra, rb, rc}
+    # slot reuse: C landed in A's freed slot
+    assert eng._results[rc].slot == eng._results[ra].slot
+
+    seq = _engine(params, mesh, **kw)
+    for rid, p, g in ((ra, pa, 2), (rb, pb, 4), (rc, pc, 3)):
+        srid = seq.submit(p, max_new_tokens=g)
+        assert seq.run()[srid] == out[rid], rid
 
 
 def test_engine_rejects_recurrent_and_ring_archs():
