@@ -15,13 +15,17 @@ Gates (exit 1 on any failure):
     must stay concatenate-free (the PR-3 win cannot silently regress);
   * structural, from the engine artifact — chunked prefill must keep
     costing fewer FLOPs per request and no worse TTFT than the padded
-    baseline (the PR-4 win);
-  * throughput — the engine's logical-clock requests-per-kstep on the
-    main trace may not regress more than ``--tolerance`` (default 20%)
-    vs the committed baseline.  The logical clock runs on the analytic
-    FLOP cost model (``benchmarks/common.py``), so this number is a
-    deterministic function of the code and the gate is free of CI
-    wall-clock noise.
+    baseline (the PR-4 win); the token-packed tick must stay
+    token-identical to the chunked oracle (kernel-match), concatenate-
+    free, and no slower than chunked on the main trace, and on the
+    saturated trace must hold the PR-5 claim — logical throughput >=
+    gang with TTFT p50 <= chunked;
+  * throughput — the engine's logical-clock requests-per-kstep (packed
+    and chunked, main trace) may not regress more than ``--tolerance``
+    (default 20%) vs the committed baseline.  The logical clock runs
+    on the analytic FLOP cost model (``benchmarks/common.py``), so
+    this number is a deterministic function of the code and the gate
+    is free of CI wall-clock noise.
 
 Wall-clock fields are compared and reported in the output artifact but
 never gated.
@@ -66,13 +70,38 @@ def compare(decode_base, decode_cur, engine_base, engine_cur,
          eg.get("chunked_vs_padded_ttft_no_worse", False),
          "chunked TTFT p50 <= padded TTFT p50 on the main trace")
 
+    # -- packed tick: structural ---------------------------------------
+    gate("engine/packed_token_match",
+         eg.get("packed_token_match", False),
+         "packed serving token-identical to the chunked oracle on the "
+         "main trace (kernel-match)")
+    gate("engine/packed_concat_free",
+         eg.get("packed_concat_free", False),
+         f"cache-sized concats in the packed program="
+         f"{eg.get('packed_cache_sized_concats')}")
+    gate("engine/packed_vs_chunked_no_regression",
+         eg.get("packed_vs_chunked_no_regression", False),
+         "packed requests/kstep >= chunked on the main trace")
+    gate("engine/packed_vs_gang_saturated",
+         eg.get("packed_vs_gang_saturated", False),
+         f"saturated-trace packed/gang throughput="
+         f"x{eg.get('packed_vs_gang_saturated_speedup', 0.0):.2f} "
+         "(must be >= 1)")
+    gate("engine/packed_ttft_no_worse_saturated",
+         eg.get("packed_ttft_no_worse_saturated", False),
+         "packed TTFT p50 <= chunked TTFT p50 on the saturated trace")
+
     # -- engine bench: logical-clock throughput vs baseline ------------
-    cur = engine_cur["traces"]["main"]["chunked"]["requests_per_ksteps"]
-    base = engine_base["traces"]["main"]["chunked"]["requests_per_ksteps"]
-    floor = (1.0 - tolerance) * base
-    gate("engine/throughput_vs_baseline", cur >= floor,
-         f"current={cur:.2f} baseline={base:.2f} floor={floor:.2f} "
-         f"req/kstep (logical clock, deterministic)")
+    for mode in ("packed", "chunked"):
+        cur = engine_cur["traces"]["main"][mode]["requests_per_ksteps"]
+        base_row = engine_base["traces"]["main"].get(mode, {})
+        base = base_row.get("requests_per_ksteps")
+        if base is None:        # baseline predates this mode: skip
+            continue
+        floor = (1.0 - tolerance) * base
+        gate(f"engine/{mode}_throughput_vs_baseline", cur >= floor,
+             f"current={cur:.2f} baseline={base:.2f} floor={floor:.2f} "
+             f"req/kstep (logical clock, deterministic)")
 
     # -- reported, never gated -----------------------------------------
     wall = {}

@@ -1,26 +1,38 @@
-"""Serving-engine benchmark: chunked prefill vs padded flushes vs
-static batching, on staggered-arrival traces.
+"""Serving-engine benchmark: token-packed ticks vs chunked prefill vs
+padded flushes vs static batching, on staggered-arrival traces.
 
 Replays identical Poisson traces through ServingEngine instances that
 differ only in admission policy:
 
-  * chunked — the system: FIFO admission into any freed slot, prompts
-              prefilled ``chunk_len`` tokens at a time, chunk steps
-              interleaved with decodes
+  * packed  — the system: ONE compiled program per engine tick over a
+              flat token batch of every live decode token + prompt
+              tokens from every mid-prefill request (Sarathi-style
+              token-budget planning); per-tick cost ∝ REAL tokens
+  * chunked — the PR-4 path: prompts prefilled ``chunk_len`` tokens at
+              a time in a full (n_slots, chunk_len) program, chunk
+              steps interleaved with decodes
   * padded  — PR-2 continuous batching: one monolithic right-padded
               prefill flush per admission
   * gang    — classic static batching (admit into an empty pool only,
               drain completely): the head-of-line-blocking baseline
 
+Three traces: the moderate-load ``main`` trace (chat regime), the
+``short``-prompt trace (pad-to-length waste), and the ``saturated``
+trace (arrivals far above the service rate — the regime where PR-4's
+FLOP clock recorded gang flushes out-amortizing per-row chunk calls,
+and where token packing closes that gap).
+
 To keep the comparison deterministic on noisy shared CPUs — and
 gateable in CI (``benchmarks/compare.py``) — the engines run on a
 *logical* clock whose step costs come from the ANALYTIC FLOP model in
 ``benchmarks/common.py``: one decode step costs 1 unit; a chunk step
-and a padded flush cost their FLOP multiple of a decode step.  Every
-logical metric (requests per kstep, TTFT in steps, prefill FLOPs per
-request) is a pure function of the code + trace seed.  Measured
-wall-clock per step kind is reported alongside for the wall-time
-conversions, but nothing gated depends on it.
+and a padded flush cost their FLOP multiple of a decode step; a packed
+tick costs its real-token FLOPs (``packed_step_flops``), read from the
+engine's per-tick token counters.  Every logical metric (requests per
+kstep, TTFT in steps, prefill FLOPs per request) is a pure function of
+the code + trace seed.  Measured wall-clock per step kind is reported
+alongside for the wall-time conversions, but nothing gated depends on
+it.
 
 Run standalone (writes the ``BENCH_engine.json`` artifact)::
 
@@ -35,6 +47,7 @@ import time
 
 N_SLOTS, PREFILL_LEN, MAX_CACHE = 4, 32, 96
 CHUNK_LEN, DECODE_PER_PREFILL = 8, 2
+TOKEN_BUDGET = N_SLOTS + CHUNK_LEN
 
 
 class StepClock:
@@ -71,13 +84,16 @@ def logical_costs(cfg) -> dict:
 
 def prefill_flops_per_request(cfg, plens, mode: str) -> float:
     """Mean per-request prefill FLOPs over a trace's prompt lengths:
-    chunked pays ceil(len/chunk) chunks of chunk_len queries against
-    the prefill region; padded always pays the full pad-to-length
-    forward."""
+    packed pays exactly one query per REAL prompt token; chunked pays
+    ceil(len/chunk) chunks of chunk_len queries against the prefill
+    region; padded always pays the full pad-to-length forward."""
     from .common import serve_step_flops
     total = 0.0
     for plen in plens:
-        if mode == "chunked":
+        if mode == "packed":
+            total += serve_step_flops(cfg, rows=plen, nq_per_row=1,
+                                      m=PREFILL_LEN)
+        elif mode == "chunked":
             n_chunks = -(-plen // CHUNK_LEN)
             total += n_chunks * serve_step_flops(
                 cfg, rows=1, nq_per_row=CHUNK_LEN, m=PREFILL_LEN)
@@ -98,13 +114,15 @@ def build_engine(mode: str):
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     params = T.init(cfg, jax.random.PRNGKey(0))
     clock = StepClock()
+    prefill_mode = {"packed": "packed", "padded": "padded"}.get(
+        mode, "chunked")
     eng = ServingEngine(
         cfg, mesh, params, n_slots=N_SLOTS, prefill_len=PREFILL_LEN,
         max_cache=MAX_CACHE,
         hp=ServeHParams(decode_mode="exact", ssm_chunk=8),
         decode_per_prefill=DECODE_PER_PREFILL,
-        chunk_len=CHUNK_LEN,
-        prefill_mode="padded" if mode == "padded" else "chunked",
+        chunk_len=CHUNK_LEN, token_budget=TOKEN_BUDGET,
+        prefill_mode=prefill_mode,
         gang=(mode == "gang"), clock=clock)
     return eng, clock, cfg
 
@@ -124,11 +142,14 @@ def make_trace(cfg, *, n_requests, arrival_gap, plen_range, gen_range,
     return out
 
 
-def run_trace(mode: str, trace, costs) -> dict:
+def run_trace(mode: str, trace, costs) -> tuple:
     """Drive one engine over a trace on the analytic logical clock.
-    Returns logical metrics plus measured wall ms per step kind."""
+    Returns (logical metrics plus measured wall ms per step kind,
+    {trace index: generated token ids}) — the token lists let the
+    harness gate packed ≡ chunked token-for-token."""
     import numpy as np
     from repro.serving import EngineStats, SamplingParams
+    from .common import packed_step_flops
 
     eng, clock, cfg = build_engine(mode)
     # compile warmup outside the measured window (one multi-chunk
@@ -148,11 +169,23 @@ def run_trace(mode: str, trace, costs) -> dict:
     cost = {"decode": costs["decode"],
             "prefill": (costs["chunk"] if mode != "padded"
                         else costs["padded_flush"])}
-    wall = {"decode": [], "prefill": []}
+    wall = {"decode": [], "prefill": [], "packed": []}
     while eng._sched.has_work or eng._pending:
+        d0 = eng.stats.packed_decode_tokens
+        p0 = eng.stats.packed_prefill_tokens
         w0 = time.perf_counter()
         kind = eng.step()
-        if kind in cost:
+        if kind == "packed":
+            # cost ∝ the tick's REAL packed tokens, from the engine's
+            # own counters — not n_slots × chunk_len
+            wall[kind].append(time.perf_counter() - w0)
+            clock.t += packed_step_flops(
+                cfg,
+                decode_tokens=eng.stats.packed_decode_tokens - d0,
+                prefill_tokens=eng.stats.packed_prefill_tokens - p0,
+                m_decode=MAX_CACHE,
+                m_prefill=PREFILL_LEN) / costs["decode_flops"]
+        elif kind in cost:
             wall[kind].append(time.perf_counter() - w0)
             clock.t += cost[kind]
         else:                               # idle: jump to next arrival
@@ -162,6 +195,8 @@ def run_trace(mode: str, trace, costs) -> dict:
 
     s = eng.stats.summary()
     med = (lambda xs: 1e3 * float(np.median(xs)) if xs else 0.0)
+    results = {rid - warmed: toks for rid, toks in eng.results().items()
+               if rid >= warmed}
     return {
         "requests_per_ksteps": 1e3 * len(trace) / steps,
         "ttft_p50_steps": s["ttft_p50_s"],   # logical-clock units
@@ -171,15 +206,61 @@ def run_trace(mode: str, trace, costs) -> dict:
         "prefills": s["prefills"],
         "prefill_chunks": s["prefill_chunks"],
         "prefill_tokens": s["prefill_tokens"],
+        "chunk_tokens_real": s["chunk_tokens_real"],
+        "chunk_tokens_padded": s["chunk_tokens_padded"],
         "decode_steps": s["decode_steps"],
+        "packed_ticks": s["packed_ticks"],
+        "packed_decode_tokens": s["packed_decode_tokens"],
+        "packed_prefill_tokens": s["packed_prefill_tokens"],
         "elapsed_steps": steps,
         "wall_decode_ms": med(wall["decode"]),
         "wall_prefill_ms": med(wall["prefill"]),
-    }
+        "wall_packed_ms": med(wall["packed"]),
+    }, results
+
+
+def packed_cache_sized_concats() -> int:
+    """Structural proof that the packed program never materializes a
+    cache-sized concatenate: walk the traced jaxpr (same technique as
+    the decode microbench) and count concatenate eqns whose output
+    carries >= MAX_CACHE elements in any dim."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import transformer as T
+    from repro.runtime.serve import (ServeHParams, init_cache,
+                                     make_packed_step)
+
+    cfg = bench_config()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    hp = ServeHParams(decode_mode="exact", ssm_chunk=8)
+    step, lay, _, _ = make_packed_step(
+        cfg, mesh, params, batch=N_SLOTS, cap=MAX_CACHE,
+        prefill_len=PREFILL_LEN, token_budget=TOKEN_BUDGET, hp=hp)
+    cache = init_cache(cfg, lay, N_SLOTS, hp)
+    tb = TOKEN_BUDGET
+    args = (params, cache, jnp.zeros(tb, jnp.int32),
+            jnp.full(tb, -1, jnp.int32), jnp.full(tb, -1, jnp.int32),
+            jnp.full(tb, -1, jnp.int32), jnp.zeros(tb, jnp.int32))
+
+    def walk(jx):
+        n = 0
+        for e in jx.eqns:
+            if (e.primitive.name == "concatenate"
+                    and any(d >= MAX_CACHE
+                            for d in e.outvars[0].aval.shape)):
+                n += 1
+            for sub in e.params.values():
+                subs = sub if isinstance(sub, (list, tuple)) else [sub]
+                n += sum(walk(s.jaxpr) for s in subs
+                         if hasattr(s, "jaxpr"))
+        return n
+    return walk(jax.make_jaxpr(step)(*args).jaxpr)
 
 
 def run_all() -> dict:
-    """Both traces through every relevant engine; the BENCH_engine.json
+    """All traces through every relevant engine; the BENCH_engine.json
     payload, including the structural gates compare.py enforces."""
     import jax
 
@@ -187,32 +268,38 @@ def run_all() -> dict:
     costs = logical_costs(cfg)
     # main trace: generation-dominated serving at moderate load (chat
     # regime — decode work ≫ prefill work, generation lengths highly
-    # variable, arrivals near the service rate).  Under heavy
-    # saturation static batching amortizes prefill across a whole gang
-    # and wins raw FLOP throughput (the docs discuss it); the serving
-    # regime users feel is this one, where head-of-line blocking shows.
+    # variable, arrivals near the service rate) — the regime users
+    # feel, where head-of-line blocking shows.
     main_trace = make_trace(cfg, n_requests=24, arrival_gap=30.0,
                             plen_range=(8, 33), gen_range=(8, 65), seed=0)
     # short-prompt trace: where pad-to-prefill_len waste is largest
     short_trace = make_trace(cfg, n_requests=16, arrival_gap=2.0,
                              plen_range=(4, 9), gen_range=(8, 25), seed=1)
+    # saturated trace: arrivals far above the service rate, queue
+    # always deep — the regime where PR-4's FLOP clock recorded gang
+    # flushes out-amortizing per-row chunk calls; token packing is the
+    # answer, and this trace gates it.
+    sat_trace = make_trace(cfg, n_requests=24, arrival_gap=0.5,
+                           plen_range=(8, 33), gen_range=(8, 33), seed=2)
 
-    res = {
-        "main": {m: run_trace(m, main_trace, costs)
-                 for m in ("chunked", "padded", "gang")},
-        "short": {m: run_trace(m, short_trace, costs)
-                  for m in ("chunked", "padded")},
-    }
-    flops = {
-        "main_chunked": prefill_flops_per_request(
-            cfg, [len(p) for _, p, _ in main_trace], "chunked"),
-        "main_padded": prefill_flops_per_request(
-            cfg, [len(p) for _, p, _ in main_trace], "padded"),
-        "short_chunked": prefill_flops_per_request(
-            cfg, [len(p) for _, p, _ in short_trace], "chunked"),
-        "short_padded": prefill_flops_per_request(
-            cfg, [len(p) for _, p, _ in short_trace], "padded"),
-    }
+    res, toks = {}, {}
+    for trace_name, trace, modes in (
+            ("main", main_trace, ("packed", "chunked", "padded", "gang")),
+            ("short", short_trace, ("packed", "chunked", "padded")),
+            ("saturated", sat_trace, ("packed", "chunked", "gang"))):
+        res[trace_name], toks[trace_name] = {}, {}
+        for m in modes:
+            res[trace_name][m], toks[trace_name][m] = run_trace(
+                m, trace, costs)
+
+    flops = {}
+    for trace_name, trace in (("main", main_trace),
+                              ("short", short_trace)):
+        for m in ("packed", "chunked", "padded"):
+            flops[f"{trace_name}_{m}"] = prefill_flops_per_request(
+                cfg, [len(p) for _, p, _ in trace], m)
+
+    n_concats = packed_cache_sized_concats()
     gates = {
         # chunked prefill must cost fewer FLOPs per request AND no
         # worse median TTFT than the padded baseline on short prompts
@@ -232,6 +319,32 @@ def run_all() -> dict:
         "continuous_vs_gang_speedup": (
             res["main"]["chunked"]["requests_per_ksteps"]
             / res["main"]["gang"]["requests_per_ksteps"]),
+        # ---- packed structural gates ---------------------------------
+        # kernel-match analog: packed serving is token-identical to the
+        # chunked oracle on the identical main trace
+        "packed_token_match": all(
+            toks["main"]["packed"][i] == toks["main"]["chunked"][i]
+            for i in range(len(main_trace))),
+        # the packed program materializes no cache-sized concatenate
+        "packed_concat_free": n_concats == 0,
+        "packed_cache_sized_concats": n_concats,
+        # packing may not regress the moderate-load regime it inherits
+        "packed_vs_chunked_no_regression": (
+            res["main"]["packed"]["requests_per_ksteps"]
+            >= 0.999 * res["main"]["chunked"]["requests_per_ksteps"]),
+        # THE saturation claim: packed logical throughput >= gang while
+        # TTFT p50 <= chunked — per-tick cost now scales with real
+        # tokens, so packing out-amortizes the gang flush too
+        "packed_vs_gang_saturated": (
+            res["saturated"]["packed"]["requests_per_ksteps"]
+            >= res["saturated"]["gang"]["requests_per_ksteps"]),
+        "packed_ttft_no_worse_saturated": (
+            res["saturated"]["packed"]["ttft_p50_steps"]
+            <= res["saturated"]["chunked"]["ttft_p50_steps"] + 1e-9),
+        "packed_vs_gang_saturated_speedup": (
+            res["saturated"]["packed"]["requests_per_ksteps"]
+            / max(res["saturated"]["gang"]["requests_per_ksteps"],
+                  1e-9)),
     }
     return {
         "bench": "engine_throughput",
@@ -239,6 +352,7 @@ def run_all() -> dict:
         "config": {"n_slots": N_SLOTS, "prefill_len": PREFILL_LEN,
                    "max_cache": MAX_CACHE, "chunk_len": CHUNK_LEN,
                    "decode_per_prefill": DECODE_PER_PREFILL,
+                   "token_budget": TOKEN_BUDGET,
                    "n_layers": cfg.n_layers, "d_model": cfg.d_model},
         "logical_costs": {k: v for k, v in costs.items()
                           if k != "decode_flops"},
@@ -251,7 +365,7 @@ def run_all() -> dict:
 def main(report):
     payload = run_all()
     res, flops = payload["traces"], payload["prefill_flops_per_request"]
-    for name in ("chunked", "padded", "gang"):
+    for name in ("packed", "chunked", "padded", "gang"):
         s = res["main"][name]
         report(f"engine/{name}/requests_per_ksteps", 0.0,
                f"{s['requests_per_ksteps']:.1f}")
@@ -260,24 +374,33 @@ def main(report):
         report(f"engine/{name}/occupancy", 0.0, f"{s['occupancy']:.2f}")
         report(f"engine/{name}/wall_ms", s["wall_decode_ms"] * 1e3,
                f"decode {s['wall_decode_ms']:.1f}ms "
-               f"prefill {s['wall_prefill_ms']:.1f}ms")
-    for name in ("chunked", "padded"):
+               f"prefill {s['wall_prefill_ms']:.1f}ms "
+               f"packed {s['wall_packed_ms']:.1f}ms")
+    for name in ("packed", "chunked", "gang"):
+        s = res["saturated"][name]
+        report(f"engine/saturated/{name}/requests_per_ksteps", 0.0,
+               f"{s['requests_per_ksteps']:.1f}")
+        report(f"engine/saturated/{name}/ttft_p50_steps", 0.0,
+               f"{s['ttft_p50_steps']:.1f}")
+    for name in ("packed", "chunked", "padded"):
         s = res["short"][name]
         report(f"engine/short/{name}/ttft_p50_steps", 0.0,
                f"{s['ttft_p50_steps']:.1f}")
         report(f"engine/short/{name}/prefill_mflops_per_req", 0.0,
                f"{flops['short_' + name] / 1e6:.2f}")
     g = payload["gates"]
-    report("engine/gate/short_prefill_flops_lower", 0.0,
-           str(g["short_prefill_flops_lower"]))
-    report("engine/gate/short_ttft_no_worse", 0.0,
-           str(g["short_ttft_no_worse"]))
-    report("engine/gate/chunked_vs_padded_ttft_no_worse", 0.0,
-           str(g["chunked_vs_padded_ttft_no_worse"]))
+    for gate in ("short_prefill_flops_lower", "short_ttft_no_worse",
+                 "chunked_vs_padded_ttft_no_worse", "packed_token_match",
+                 "packed_concat_free", "packed_vs_chunked_no_regression",
+                 "packed_vs_gang_saturated",
+                 "packed_ttft_no_worse_saturated"):
+        report(f"engine/gate/{gate}", 0.0, str(g[gate]))
     report("engine/continuous_vs_static_ttft_speedup", 0.0,
            f"x{g['continuous_vs_gang_ttft_speedup']:.2f}")
     report("engine/continuous_vs_static_speedup", 0.0,
            f"x{g['continuous_vs_gang_speedup']:.2f}")
+    report("engine/packed_vs_gang_saturated_speedup", 0.0,
+           f"x{g['packed_vs_gang_saturated_speedup']:.2f}")
     return payload
 
 
@@ -301,5 +424,9 @@ if __name__ == "__main__":
     print(f"# wrote {args.json}")
     g = payload["gates"]
     if not (g["short_prefill_flops_lower"] and g["short_ttft_no_worse"]
-            and g["chunked_vs_padded_ttft_no_worse"]):
+            and g["chunked_vs_padded_ttft_no_worse"]
+            and g["packed_token_match"] and g["packed_concat_free"]
+            and g["packed_vs_chunked_no_regression"]
+            and g["packed_vs_gang_saturated"]
+            and g["packed_ttft_no_worse_saturated"]):
         sys.exit(1)

@@ -1,7 +1,10 @@
 """Continuous-batching engine demo: six requests with staggered
 arrivals share four decode slots over a (2 data x 4 model) host mesh —
 late arrivals are prefilled and spliced into slots freed by earlier
-evictions, while the surviving streams keep decoding.
+evictions, while the surviving streams keep decoding.  With the
+default token-packed mode, each engine tick with any prefill work runs
+ONE compiled program over a flat mixed batch of decode + prompt tokens
+(watch the 'packed' step kinds below).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python examples/serve_engine.py

@@ -51,10 +51,15 @@ def main():
     ap.add_argument("--chunk-len", type=int, default=64,
                     help="[engine] prefill chunk size (clamped to the "
                          "prefill length)")
-    ap.add_argument("--prefill-mode", default="chunked",
-                    choices=("chunked", "padded"),
-                    help="[engine] chunked prefill (default) or the "
-                         "legacy pad-to-length admission flush")
+    ap.add_argument("--prefill-mode", default="packed",
+                    choices=("packed", "chunked", "padded"),
+                    help="[engine] token-packed unified ticks "
+                         "(default), chunked prefill, or the legacy "
+                         "pad-to-length admission flush")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="[engine, packed] tokens per packed tick "
+                         "(default: slots + chunk-len); must be >= the "
+                         "slot count")
     args = ap.parse_args()
 
     import jax
@@ -94,7 +99,8 @@ def main():
                             prefill_len=n, max_cache=cap, hp=hp,
                             prism=prism, gang=args.gang,
                             chunk_len=args.chunk_len,
-                            prefill_mode=args.prefill_mode)
+                            prefill_mode=args.prefill_mode,
+                            token_budget=args.token_budget)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
                                              size=args.requests))

@@ -52,6 +52,22 @@ over the already-written prefix + a per-query intra-chunk pass, merged
 and psum-combined across shards), so engine output is token-identical
 to the monolithic prefill path.
 
+Token-packed serving: ``make_packed_step`` compiles ONE program per
+engine tick that consumes a flat ragged batch of ``token_budget``
+mixed tokens — every live decode token plus prompt-chunk tokens from
+every mid-prefill request, each carrying its own ``(slot, pos, off,
+is_prefill)`` metadata — and runs embed→blocks→logits once over the
+real tokens (dead entries pass slot = -1).  Per-tick cost scales with
+the number of REAL tokens instead of ``n_slots × chunk_len``, which is
+what closes the saturation gap the chunked engine's FLOP clock
+recorded against gang flushes.  Attention generalizes the chunk path's
+two-pass stats trick to ragged multi-request packing: prior cache
+columns go through the flash-decode stats path with per-token ``pos``,
+intra-tick self columns through a segment-id-masked causal pass
+(tokens of different requests never attend to each other), merged with
+``merge_stats`` and psum-combined — packed ≡ chunked ≡ sequential
+token-for-token in both decode modes.
+
 Kernel routing: every decode path funnels through ``decode_attention``
 below, which computes the per-shard partial softmax stats with the
 fused Pallas flash-decode kernel (``kernels/decode_attention.py``) or
@@ -63,6 +79,7 @@ switch.  The dense jnp forms stay below as the test oracles.
 """
 from __future__ import annotations
 
+import collections
 import functools
 from dataclasses import dataclass
 
@@ -96,6 +113,14 @@ from ..sharding.context import ShardedPrismContext
 from ..sharding.rules import gather_tree, param_specs, spec_tree
 from ..launch.mesh import batch_axes, mesh_axes
 from .train import embed_vp, output_table
+
+
+#: Trace-time counters, bumped once per (re)trace of each step-factory
+#: body.  A serving engine that caches its compiled programs correctly
+#: keeps every count bounded no matter how its ticks alternate between
+#: packed / decode / chunk programs — the regression test in
+#: ``tests/test_packed_step.py`` asserts exactly that.
+trace_counts: collections.Counter = collections.Counter()
 
 
 @dataclass(frozen=True)
@@ -374,6 +399,21 @@ def _write_chunk(cache_kv, new_rows, slot, owner):
         new_rows.astype(cache_kv.dtype), mode="drop")
 
 
+def _write_packed(cache_kv, new_rows, row, col, ok):
+    """Scatter a packed tick's (T,Hkv,hd) K/V rows into the
+    (B,cap_l,Hkv,hd) cache at per-token (batch row, column) addresses.
+    Tokens whose ``ok`` is False (dead entry, wrong sequence shard,
+    wrong batch shard) are routed to an out-of-range column and dropped
+    by the scatter.  In-range duplicates never occur — the engine packs
+    each (request, position) at most once per tick — so the write stays
+    O(T), independent of both the slot count and the capacity."""
+    b, cap_l = cache_kv.shape[:2]
+    r = jnp.clip(row, 0, b - 1)
+    c = jnp.where(ok, col, cap_l)                         # OOB -> dropped
+    return cache_kv.at[r, c].set(new_rows.astype(cache_kv.dtype),
+                                 mode="drop")
+
+
 def decode_attention(q, k, v, valid, axes, scale, *, gz=None, kz=None,
                      vz=None, owner=None, mode="exact", backend="auto"):
     """Single entry point for per-token decode attention — every decode
@@ -531,6 +571,15 @@ def _seq_index(seq_axes):
     for a in seq_axes[1:]:
         idx = idx * axis_size(a) + lax.axis_index(a)
     return idx
+
+
+def _batch_index(ba):
+    """Linearized shard index over the batch mesh axes (0 when the
+    batch is replicated) — the packed step needs it to map a global
+    slot id to this shard's local cache row."""
+    if not ba:
+        return jnp.int32(0)
+    return _seq_index(ba)
 
 
 def _means_meta(lay: ServeLayout):
@@ -871,6 +920,7 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
     unit_kinds = cfg.block_kinds[:u]
 
     def body(params_local, cache_local, token, pos):
+        trace_counts["serve_step"] += 1
         x = embed_token(cfg, params_local, rules, token, pos,
                         sharded_vocab=vocab_sharded)
 
@@ -1041,6 +1091,7 @@ def make_prefill_step(cfg: ModelConfig, mesh, params, prism: PrismConfig,
     prism_augment = prism_cfg.mode == "prism"
 
     def body(params_local, batch_local):
+        trace_counts["prefill_step"] += 1
         ctx = ShardedPrismContext(
             prism_cfg, axis=lay.seq_axes[-1], n_shards=lay.n_seq,
             seq_shards=lay.seq_axes[:-1], prefix_len=cfg.prefix_len)
@@ -1318,6 +1369,7 @@ def make_chunk_prefill_step(cfg: ModelConfig, mesh, params, *,
                 f"caches; arch {cfg.name!r} has block kind {kind!r}")
 
     def body(params_local, cache_local, tokens, off, nreal):
+        trace_counts["chunk_prefill_step"] += 1
         j = jnp.arange(chunk_len)
         alive = (off[:, None] >= 0) & (j[None, :] < nreal[:, None])
         row_pos = jnp.where(alive, off[:, None] + j[None, :], -1)
@@ -1373,3 +1425,312 @@ def make_chunk_prefill_step(cfg: ModelConfig, mesh, params, *,
         donate_argnums=(1,),
     )
     return jitted, lay, rules
+
+
+# --------------------------------------------------------------------------
+# token-packed unified serving step (mixed prefill + decode per tick)
+# --------------------------------------------------------------------------
+
+def packed_attention(q, k, v, valid, bias_self, k_new, v_new, axes, scale,
+                     backend="auto"):
+    """Exact attention for one token-packed tick — the ragged
+    multi-request generalization of ``chunk_attention``.  Two disjoint
+    column sets, two passes:
+
+      * **prior columns** — each packed token attends its own request's
+        already-written cache row (gathered per token), with validity
+        stopping strictly before the request's tick-start offset, so
+        the single-token flash-decode stats path applies verbatim with
+        T tokens as the batch axis (no query folding needed: Nq = 1
+        per token);
+      * **intra-tick columns** — the T just-projected K/V rows under a
+        segment-id-masked causal bias (``bias_self (1,T,T)``): tokens
+        of different requests NEVER attend to each other, and each
+        column contributes on the one shard pair owning its cache
+        address.
+
+    The stat triples merge associatively and the cross-shard combine
+    runs over the sequence AND batch axes (``axes``) — shards that do
+    not hold a token's cache row contribute empty stats and cancel —
+    so packed output is exact and replicated on every device.
+
+    q (T,1,Hq,hd); k,v (T,M,Hkv,hd) per-token gathered cache rows;
+    valid (T,M); k_new,v_new (T,1,Hkv,hd).  Returns (T,1,Hq,hd)."""
+    if use_pallas(backend):
+        m1, l1, a1 = flash_decode_stats(q, k, v, valid, scale=scale,
+                                        interpret=pallas_interpret())
+    else:
+        m1, l1, a1 = decode_stats_reference(q, k, v, valid, scale=scale)
+    # (T,Hq,1,1)/(T,1,Hq,hd) -> the Nq = T shapes merge_stats expects
+    stats_prior = (m1[:, :, 0, 0].T[None, :, :, None],
+                   l1[:, :, 0, 0].T[None, :, :, None],
+                   a1[:, 0][None])
+    stats_self = chunk_softmax_stats(q[:, 0][None], k_new[:, 0][None],
+                                     v_new[:, 0][None], bias_self, scale)
+    m_p, l_p, acc_p = merge_stats(stats_prior, stats_self)
+    out = _combine_exact(m_p, l_p, acc_p, axes)           # (1,T,Hq,hd)
+    return out[0][:, None].astype(v.dtype)
+
+
+def attn_packed(p, spec: AttnSpec, cfg: ModelConfig, x, c, meta,
+                lay: ServeLayout, hp: ServeHParams):
+    """Attention sublayer over one token-packed tick.
+
+    ``x`` (T,1,D) replicated; ``meta = (slot, pos, off, is_prefill,
+    row_loc, owned)`` — the per-token packing metadata (slot = -1 dead
+    entry) plus this batch shard's local cache row per token and
+    whether it owns it.  Writes every real token's K/V at its runtime
+    (slot, position) address, attends exactly (prior columns via
+    per-token flash-decode stats over the token's gathered cache row,
+    intra-tick columns via the segment-masked causal pass, stat combine
+    over sequence and batch axes), serves decode tokens the prism
+    owner-view over the means cache when configured, and in prism mode
+    advances the per-request Segment-Means running state over the REAL
+    prefill tokens only — the flat-token twin of the chunk path's
+    accumulation, so a prompt that arrives packed produces bit-equal
+    gz/zsum (and kz/vz) to one that arrives chunked."""
+    slot, pos, off, is_prefill, row_loc, owned = meta
+    xn = norm(p["ln1"], x, cfg.norm_kind)
+    rp = pos[:, None]                          # (T,1) token positions
+    q = attn_project_q(p["attn"], spec, xn, rp)
+    k_new, v_new = attn_project_kv(p["attn"], spec, xn, rp)
+    scale = spec.head_dim ** -0.5
+    axes_all = tuple(lay.seq_axes) + tuple(lay.ba)
+
+    idx = _seq_index(lay.seq_axes)
+    col, seq_owner, col_pos = _decode_cols(lay, idx, pos)
+    alive = pos >= 0
+    wr = seq_owner & owned & alive
+    k_c = _write_packed(c["k"], k_new[:, 0], row_loc, col, wr)
+    v_c = _write_packed(c["v"], v_new[:, 0], row_loc, col, wr)
+    new_c = dict(c, k=k_c, v=v_c)
+
+    b_loc = k_c.shape[0]
+    row = jnp.clip(row_loc, 0, b_loc - 1)
+    k_t = jnp.take(k_c, row, axis=0)           # (T, cap_l, Hkv, hd)
+    v_t = jnp.take(v_c, row, axis=0)
+
+    # prior columns: strictly before the request's tick-start offset,
+    # on the batch shard holding the slot (others: empty stats)
+    valid = ((owned & alive)[:, None]
+             & (col_pos[None, :] < jnp.maximum(off, 0)[:, None]))
+    # intra-tick columns: same request only — tokens of different
+    # requests must never attend to each other — causal, each column
+    # on the one (batch, sequence) shard pair owning its address
+    ok_q = (slot >= 0) & alive
+    ok_k = ok_q & seq_owner & owned
+    bias_self = jnp.where(
+        (slot[None, :, None] == slot[None, None, :])
+        & (pos[None, None, :] <= pos[None, :, None])
+        & ok_q[None, :, None] & ok_k[None, None, :], 0.0, NEG_INF)
+    out = packed_attention(q, k_t, v_t, valid, bias_self, k_new, v_new,
+                           axes_all, scale, backend=hp.backend)
+
+    if hp.decode_mode == "prism" and "kz" in c:
+        # decode tokens take the paper's owner view over the means
+        # cache (identical semantics to attn_decode) with every
+        # per-request input gathered per token; prefill tokens keep
+        # the exact combine above, as on the chunked path
+        lo, hi, mid, _, shard_of = _means_meta(lay)
+        cnt_t = jnp.take(c["gz"], row, axis=0)             # (T, m)
+        gz = jnp.where(
+            (jnp.asarray(shard_of)[None, :] != idx)
+            & (jnp.asarray(lo)[None, :] + cnt_t <= pos[:, None] + 1)
+            & (owned & alive)[:, None],
+            cnt_t, 0.0)
+        kz_t = jnp.take(c["kz"], row, axis=0)
+        vz_t = jnp.take(c["vz"], row, axis=0)
+        valid_le = ((owned & alive)[:, None]
+                    & (col_pos[None, :] <= pos[:, None]))
+        sel = seq_owner & owned & alive & (is_prefill == 0)
+        out_pz = decode_attention(q, k_t, v_t, valid_le, axes_all,
+                                  scale, gz=gz, kz=kz_t, vz=vz_t,
+                                  owner=sel, mode="prism",
+                                  backend=hp.backend)
+        out = jnp.where((is_prefill != 0)[:, None, None, None],
+                        out, out_pz)
+
+        # Segment-Means capture over the tick's REAL prefill tokens
+        upd = (is_prefill != 0) & owned & alive
+        r_upd = jnp.where(upd, row_loc, b_loc)             # OOB -> drop
+        big = jnp.int32(1 << 30)
+        off_b = jnp.full((b_loc,), big, jnp.int32).at[r_upd].min(
+            jnp.where(upd, off, big), mode="drop")
+        filled = jnp.zeros((b_loc,), jnp.int32).at[r_upd].max(
+            jnp.where(upd, pos + 1, 0), mode="drop")
+        act = jnp.zeros((b_loc,), jnp.int32).at[r_upd].max(
+            upd.astype(jnp.int32), mode="drop") > 0
+        onehot = r_upd[:, None] == jnp.arange(b_loc)[None, :]
+        seg = ((jnp.asarray(lo)[None, :] <= pos[:, None])
+               & (pos[:, None] <= jnp.asarray(hi)[None, :]))
+        zsum = jnp.where((act & (off_b == 0))[:, None, None], 0.0,
+                         c["zsum"])
+        zsum = zsum + jnp.einsum("tb,tm,td->bmd",
+                                 onehot.astype(jnp.float32),
+                                 seg.astype(jnp.float32),
+                                 x[:, 0].astype(jnp.float32))
+        cnt = segment_fill_counts(lo, hi, filled)          # (b_loc, m)
+        z = (zsum / jnp.maximum(cnt, 1.0)[..., None]).astype(x.dtype)
+        kz, vz = attn_project_kv(p["attn"], spec,
+                                 norm(p["ln1"], z, cfg.norm_kind),
+                                 jnp.asarray(mid, jnp.float32))
+        sel_b = act[:, None, None, None]
+        new_c["kz"] = jnp.where(sel_b, kz.astype(c["kz"].dtype), c["kz"])
+        new_c["vz"] = jnp.where(sel_b, vz.astype(c["vz"].dtype), c["vz"])
+        new_c["gz"] = jnp.where(act[:, None], cnt, c["gz"])
+        new_c["zsum"] = zsum
+
+    o = attn_output(p["attn"], out)
+    if cfg.parallel_block:
+        o = o + mlp(p["mlp"], xn, cfg.mlp_kind)
+    return o, new_c
+
+
+def block_packed(cfg: ModelConfig, kind: str, p, shared, x, c, meta,
+                 lay: ServeLayout, hp: ServeHParams):
+    """One residual block over a token-packed tick.  Returns
+    (x, new_cache).  Same chunkable-kind restriction as the engine."""
+    if kind in ("attn", "moe"):
+        spec = T.attn_spec(cfg, kind)
+        o, c = attn_packed(p, spec, cfg, x, c, meta, lay, hp)
+        x = x + o
+        if cfg.parallel_block:
+            return x, c
+        if kind == "moe":
+            y, _ = moe_apply(p["moe"], norm(p["ln2"], x, cfg.norm_kind),
+                             cfg, DecodeMoeCtx(tp=hp.decode_tp))
+            x = x + y
+        elif cfg.d_ff:
+            x = x + mlp(p["mlp"], norm(p["ln2"], x, cfg.norm_kind),
+                        cfg.mlp_kind)
+        return x, c
+    if kind == "shared_attn":
+        spec = T.attn_spec(cfg, "attn")
+        o, c = attn_packed(shared, spec, cfg, x, c, meta, lay, hp)
+        x = x + o
+        x = x + mlp(shared["mlp"], norm(shared["ln2"], x, cfg.norm_kind),
+                    cfg.mlp_kind)
+        return x, c
+    raise ValueError(
+        f"packed serving supports position-addressed attention caches "
+        f"only (got block kind {kind!r})")
+
+
+def make_packed_step(cfg: ModelConfig, mesh, params, *,
+                     batch: int, cap: int, prefill_len: int,
+                     token_budget: int,
+                     hp: ServeHParams = ServeHParams()):
+    """jitted (params, cache, tokens (T,), slot (T,), pos (T,),
+    off (T,), is_prefill (T,)) -> (logits (min(batch,T), V), cache) —
+    ONE compiled program per engine tick over a flat token-packed
+    batch of ``T = token_budget`` mixed prefill + decode tokens.
+
+    Each entry of the (T,) metadata vectors describes one packed
+    token: ``slot`` the decode slot (cache batch row) it belongs to
+    (-1 = dead entry; ragged budgets leave the tail dead), ``pos`` its
+    global position, ``off`` the first position its request packs this
+    tick (a decode token has off == pos — its prior columns are
+    everything strictly before it, its own column rides the intra-tick
+    pass), ``is_prefill`` 1 for prompt tokens (never sampled; the
+    engine keeps the rewind) and 0 for decode tokens.  The LM head
+    runs over the static decode prefix only — ``plan_tick`` packs
+    decode tokens first, so ``logits`` is ``(min(batch, T), V)``.
+    Per-tick cost scales with the REAL packed tokens, not
+    ``n_slots × chunk_len`` — the fleet-level token packing the
+    chunked engine's FLOP clock called for.
+
+    The cache has the DECODE layout and is written in place with
+    owner-masked scatters (no grow/insert round trip); in prism decode
+    mode the program additionally advances the per-request
+    Segment-Means state (kz/vz/gz/zsum) over the tick's real prompt
+    tokens only.  Output is token-for-token identical to chunked and
+    sequential serving in both decode modes (the packed equivalence
+    tests pin this on the 2x4 mesh).  Returns
+    (jitted, layout, rules, logits_spec)."""
+    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len)
+    assert token_budget >= 1, token_budget
+    assert not hp.decode_tp, "packed serving does not support decode_tp"
+    rules = param_specs(params, mesh, cfg.vocab_size)
+    pspecs = spec_tree(rules)
+    cspecs = cache_specs(cfg, lay, hp)
+    vocab_sharded = (rules["embed"]["table"].kind == "vocab")
+    shared_rules = rules.get("shared")
+    u, n_units, _ = cfg.scan_split
+    unit_kinds = cfg.block_kinds[:u]
+    for kind in cfg.block_kinds:
+        if kind not in ("attn", "moe", "shared_attn"):
+            raise ValueError(
+                f"packed serving needs position-addressed attention "
+                f"caches; arch {cfg.name!r} has block kind {kind!r}")
+    axes = mesh_axes(mesh)
+    n_b = int(np.prod([axes[a] for a in lay.ba])) if lay.ba else 1
+    b_loc = batch // n_b
+    head_rows = min(batch, token_budget)   # decode tokens pack first
+
+    def body(params_local, cache_local, tokens, slot, pos, off, pre):
+        trace_counts["packed_step"] += 1
+        didx = _batch_index(lay.ba)
+        row_loc = jnp.where(slot >= 0, slot - didx * b_loc, -1)
+        owned = (row_loc >= 0) & (row_loc < b_loc)
+        meta = (slot, pos, off, pre, row_loc, owned)
+        x = embed_token(cfg, params_local, rules, tokens, pos,
+                        sharded_vocab=vocab_sharded)
+
+        def unit_body(x, xs):
+            p_sl, c_sl = xs
+            shared = (gather_tree(params_local["shared"], shared_rules)
+                      if shared_rules else None)
+            new = []
+            for j, kind in enumerate(unit_kinds):
+                p = gather_tree(p_sl[j], rules["scan"][j])
+                x, nc = block_packed(cfg, kind, p, shared, x, c_sl[j],
+                                     meta, lay, hp)
+                new.append(nc)
+            return x, tuple(new)
+
+        x, new_stacks = lax.scan(
+            unit_body, x,
+            (tuple(params_local["scan"]), tuple(cache_local["scan"])))
+
+        new_tail = []
+        for t, tree in enumerate(params_local["tail"]):
+            kind = cfg.block_kinds[n_units * u + t]
+            p = gather_tree(tree, rules["tail"][t])
+            shared = (gather_tree(params_local["shared"], shared_rules)
+                      if shared_rules else None)
+            x, nc = block_packed(cfg, kind, p, shared, x,
+                                 cache_local["tail"][t], meta, lay, hp)
+            new_tail.append(nc)
+
+        x = norm(params_local["final_norm"], x, cfg.norm_kind)
+        table = output_table(params_local, cfg)
+        # only decode tokens are ever sampled, and plan_tick packs them
+        # first — at most n_slots of them — so the LM head runs over
+        # the static decode prefix, not the whole budget (a prefill-
+        # heavy tick would otherwise pay budget/n_slots times the
+        # needed head FLOPs on logits nobody reads)
+        xh = x[:head_rows, 0]
+        logits = (xh @ table.T.astype(xh.dtype)).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        return logits, {"scan": list(new_stacks), "tail": new_tail}
+
+    vspec = P(None)                    # packed vectors ride replicated
+    lspec = P(None, "model" if vocab_sharded else None)
+    body_sm = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, cspecs, vspec, vspec, vspec, vspec, vspec),
+        out_specs=(lspec, cspecs),
+        check_vma=False)
+
+    sh = functools.partial(NamedSharding, mesh)
+    jitted = jax.jit(
+        body_sm,
+        in_shardings=(jax.tree.map(sh, pspecs),
+                      jax.tree.map(sh, cspecs),
+                      sh(vspec), sh(vspec), sh(vspec), sh(vspec),
+                      sh(vspec)),
+        out_shardings=(sh(lspec), jax.tree.map(sh, cspecs)),
+        donate_argnums=(1,),
+    )
+    return jitted, lay, rules, lspec

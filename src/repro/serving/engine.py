@@ -3,48 +3,53 @@
 Request lifecycle (docs/serving.md has the full tour)::
 
     submit ──> [FIFO queue] ──> admit into a free slot (host-side)
-    ──> CHUNKED PREFILL: the prompt lands chunk_len tokens at a time,
-    written straight into the slot's decode-cache row at its true
-    offsets, interleaved with decode steps (at most one chunk per
-    decode_per_prefill decode steps while streams are decoding) ──>
-    rewind to pos = len(prompt) - 1 ──> per-slot decode (pos vector;
-    idle/prefilling rows carry pos = -1) ──> host-side sampling ──>
-    evict on EOS / max-tokens ──> slot freed, mid-flight.
+    ──> PACKED PREFILL: each engine tick, every live decode token plus
+    prompt-chunk tokens from every mid-prefill request pack into ONE
+    flat token batch, consumed by one compiled program (cost ∝ real
+    tokens) ──> rewind to pos = len(prompt) - 1 ──> decode (packed
+    ticks while anything is prefilling, the plain per-slot decode
+    program otherwise) ──> host-side sampling ──> evict on EOS /
+    max-tokens ──> slot freed, mid-flight.
 
-The engine owns exactly two compiled programs, each traced once:
+Engine tick programs (compiled lazily, cached by ``(kind,
+token_budget)`` so alternating tick kinds never retrace):
 
-  * ``chunk``    — batch = n_slots, up to chunk_len prompt tokens per
-    row at per-row runtime offsets (rows not prefilling pass
-    offset = -1).  EVERY mid-prefill request advances in the same
-    call, so admission cost amortises over bursts and a long prompt
-    is spread over many cheap steps instead of one monolithic flush —
-    in-flight decodes keep their bounded share of the engine
-    (chunk-vs-decode interleave), and a short prompt pays
-    ceil(len/chunk_len) chunks instead of a full pad-to-prefill_len
-    forward.
-  * ``step``     — batch = n_slots single-token decode with a (B,) pos
-    vector: every request decodes at its own depth.
+  * ``packed`` — the default hot path: one flat ``(token_budget,)``
+    batch of mixed work per tick, planned Sarathi-style by
+    ``FifoScheduler.plan_tick`` (decodes first, remaining budget
+    filled with prompt tokens across ALL mid-prefill requests).
+    Per-tick cost scales with the REAL packed tokens instead of
+    ``n_slots × chunk_len`` — under saturation this out-amortizes even
+    the gang flush, which the chunked engine could not.
+  * ``decode`` — batch = n_slots single-token decode with a (B,) pos
+    vector; used for ticks with nothing prefilling (every request at
+    its own depth).
+  * ``chunk``  — the ``prefill_mode='chunked'`` oracle: batch =
+    n_slots, up to chunk_len prompt tokens per row at per-row runtime
+    offsets, interleaved with decodes under ``decode_per_prefill``.
+  * the legacy ``padded`` trio (flush + grow + insert).
 
-The admission rewind: the chunk program returns no logits; when the
-last chunk lands, the slot starts decoding at ``pos = len(prompt) - 1``,
-re-feeding the last prompt token.  That first decode step rewrites the
-token's K/V row in place (an idempotent rewrite — the computation is
-identical to the chunk's) and yields exactly the teacher-forced
-next-token logits.  TTFT is measured to the first token sampled from
-those logits.  Chunk attention is exact (cross-shard stat combine), so
-engine output is token-identical to sequential serving in every mode.
+The admission rewind: prefill programs return no sampled tokens; when
+a request's last prompt token lands, the slot starts decoding at
+``pos = len(prompt) - 1``, re-feeding the last prompt token.  That
+first decode rewrites the token's K/V row in place (an idempotent
+rewrite — the computation is identical) and yields exactly the
+teacher-forced next-token logits, in the configured decode mode.  TTFT
+is measured to the first token sampled from those logits.  Packed and
+chunk attention are exact (cross-shard stat combine), so engine output
+is token-identical to sequential serving in every mode.
 
-In ``prism`` decode mode the chunk program also accumulates the
+In ``prism`` decode mode the prefill programs also accumulate the
 Segment-Means state (kz/vz + per-request counts gz + running sums
 zsum) over REAL prompt columns only — short prompts no longer fold pad
 columns into the remote-means approximation, which the padded flush
 admission used to do (the old wart, kept reproducible via
 ``prefill_mode='padded'``).
 
-``prefill_mode='padded'`` retains the legacy three-program admission
-(right-pad to ``prefill_len``, one monolithic flush, ``grow_cache`` +
-``insert_cache_row`` into the slot) as the benchmark baseline and as a
-fallback; docs/serving.md quantifies the difference.
+``prefill_mode='chunked'`` (the PR-4 hot path) and
+``prefill_mode='padded'`` (the PR-2 three-program admission) survive
+as selectable oracles and benchmark baselines; docs/serving.md
+quantifies the differences.
 """
 from __future__ import annotations
 
@@ -60,9 +65,9 @@ from jax.sharding import NamedSharding
 from ..core.protocol import PrismConfig
 from ..models.config import ModelConfig
 from ..runtime.serve import (ServeHParams, cache_specs, grow_cache,
-                             init_cache, insert_cache_row,
-                             make_chunk_prefill_step, make_prefill_step,
-                             make_serve_step)
+                             init_cache, insert_cache_row, make_layout,
+                             make_chunk_prefill_step, make_packed_step,
+                             make_prefill_step, make_serve_step)
 from .sampling import SamplingParams, sample_token
 from .scheduler import EngineStats, FifoScheduler, Request
 
@@ -76,11 +81,12 @@ class ServingEngine:
                  hp: ServeHParams = ServeHParams(),
                  prism: PrismConfig | None = None,
                  decode_per_prefill: int = 4, gang: bool = False,
-                 chunk_len: int = 64, prefill_mode: str = "chunked",
+                 chunk_len: int = 64, prefill_mode: str = "packed",
+                 token_budget: int | None = None,
                  pad_id: int = 0, clock=time.monotonic):
-        if prefill_mode not in ("chunked", "padded"):
+        if prefill_mode not in ("packed", "chunked", "padded"):
             raise ValueError(f"prefill_mode {prefill_mode!r} not in "
-                             "('chunked', 'padded')")
+                             "('packed', 'chunked', 'padded')")
         if prism is None:
             prism = PrismConfig(
                 P=1, cr=hp.means_cr,
@@ -113,39 +119,42 @@ class ServingEngine:
         self.n_slots, self.prefill_len = n_slots, prefill_len
         self.prefill_mode = prefill_mode
         self.chunk_len = max(1, min(chunk_len, prefill_len))
+        if token_budget is None:
+            # every decoding slot's token plus one chunk's worth of
+            # prompt tokens — the smallest budget that keeps a full
+            # decode fleet moving while still packing prefill work
+            token_budget = n_slots + self.chunk_len
+        if token_budget < n_slots:
+            raise ValueError(
+                f"token_budget {token_budget} < n_slots {n_slots}: "
+                "every decoding slot needs its token in each tick")
+        self.token_budget = int(token_budget)
         self.pad_id, self._clock = pad_id, clock
+        self._hp, self._prism, self._max_cache = hp, prism, max_cache
 
-        self._step, lay_d, _, _ = make_serve_step(
-            cfg, mesh, params, batch=n_slots, cap=max_cache,
-            prefill_len=prefill_len, hp=hp)
-        self.layout = lay_d
+        self.layout = make_layout(cfg, mesh, n_slots, max_cache, hp,
+                                  prefill_len)
         # pin the decode-layout cache sharding on every path that feeds
-        # the step function (its donated args reject resharding)
-        cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                                cache_specs(cfg, lay_d, hp))
-        if prefill_mode == "chunked":
-            # ONE chunk program writes straight into the decode cache
-            # at runtime offsets — no prefill-layout cache, no grow, no
-            # insert round trip
-            self._chunk, lay_c, _ = make_chunk_prefill_step(
-                cfg, mesh, params, batch=n_slots, cap=max_cache,
-                prefill_len=prefill_len, chunk_len=self.chunk_len, hp=hp)
-            assert lay_c == lay_d, (lay_c, lay_d)
+        # the step functions (their donated args reject resharding)
+        self._cache_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            cache_specs(cfg, self.layout, hp))
+        # compiled-program cache: one entry per (kind, token_budget),
+        # so ticks that alternate program kinds (packed <-> decode)
+        # reuse the SAME jitted callable and never retrace —
+        # runtime.serve.trace_counts pins this in the tests
+        self._programs: dict = {}
+        self._step = self._program("decode")
+        if prefill_mode == "packed":
+            self._packed = self._program("packed", self.token_budget)
+        elif prefill_mode == "chunked":
+            self._chunk = self._program("chunk")
         else:
-            # legacy padded admission: monolithic flush + grow + insert
-            # (make_prefill_step re-derives PrismConfig.P from the
-            # layout's n_seq; only mode/cr of ``prism`` matter here)
-            self._prefill, lay_p, _, _ = make_prefill_step(
-                cfg, mesh, params, prism, batch=n_slots, n=prefill_len,
-                hp=hp)
-            assert lay_p.n_seq == lay_d.n_seq, (lay_p, lay_d)
-            self._grow = jax.jit(
-                functools.partial(grow_cache, lay_from=lay_p, lay_to=lay_d),
-                out_shardings=cache_sh)
-            self._insert = jax.jit(insert_cache_row, donate_argnums=(0,),
-                                   out_shardings=cache_sh)
-        self._cache = jax.device_put(init_cache(cfg, lay_d, n_slots, hp),
-                                     cache_sh)
+            self._prefill = self._program("padded_prefill")
+            self._grow = self._program("grow")
+            self._insert = self._program("insert")
+        self._cache = jax.device_put(
+            init_cache(cfg, self.layout, n_slots, hp), self._cache_sh)
 
         self._sched = FifoScheduler(n_slots,
                                     decode_per_prefill=decode_per_prefill,
@@ -155,6 +164,64 @@ class ServingEngine:
         self._results: dict = {}       # rid -> RequestState
         self._next_rid = 0
         self._t0 = None                # clock origin (first submit/run)
+
+    # ------------------------------------------------------------------
+    # compiled-program cache
+    # ------------------------------------------------------------------
+    def _program(self, kind: str, token_budget: int | None = None):
+        """Build-or-fetch one of the engine's compiled step programs.
+
+        Keyed by ``(kind, token_budget)``: repeated requests return the
+        SAME jitted callable, so however the engine's ticks alternate
+        (packed while anything prefills, plain decode otherwise) each
+        program traces at most once per engine — the regression test in
+        ``tests/test_packed_step.py`` asserts the bound via the
+        trace-time counters in ``repro.runtime.serve``."""
+        key = (kind, token_budget)
+        if key in self._programs:
+            return self._programs[key]
+        cfg, mesh, params, hp = self.cfg, self.mesh, self.params, self._hp
+        kw = dict(batch=self.n_slots, cap=self._max_cache,
+                  prefill_len=self.prefill_len, hp=hp)
+        if kind == "decode":
+            prog, lay, _, _ = make_serve_step(cfg, mesh, params, **kw)
+            assert lay == self.layout, (lay, self.layout)
+        elif kind == "packed":
+            prog, lay, _, _ = make_packed_step(
+                cfg, mesh, params, token_budget=token_budget, **kw)
+            assert lay == self.layout, (lay, self.layout)
+        elif kind == "chunk":
+            prog, lay, _ = make_chunk_prefill_step(
+                cfg, mesh, params, chunk_len=self.chunk_len, **kw)
+            assert lay == self.layout, (lay, self.layout)
+        elif kind == "padded_prefill":
+            # legacy padded admission (make_prefill_step re-derives
+            # PrismConfig.P from the layout's n_seq; only mode/cr of
+            # ``prism`` matter here)
+            prog, lay_p, _, _ = make_prefill_step(
+                cfg, mesh, params, self._prism, batch=self.n_slots,
+                n=self.prefill_len, hp=hp)
+            assert lay_p == self._prefill_layout(), (lay_p, self.layout)
+        elif kind == "grow":
+            prog = jax.jit(
+                functools.partial(grow_cache,
+                                  lay_from=self._prefill_layout(),
+                                  lay_to=self.layout),
+                out_shardings=self._cache_sh)
+        elif kind == "insert":
+            prog = jax.jit(insert_cache_row, donate_argnums=(0,),
+                           out_shardings=self._cache_sh)
+        else:
+            raise ValueError(kind)
+        self._programs[key] = prog
+        return prog
+
+    def _prefill_layout(self):
+        """The padded-admission prefill layout (cap == prefill_len) —
+        derived, so 'grow' never depends on 'padded_prefill' having
+        been built first."""
+        return make_layout(self.cfg, self.mesh, self.n_slots,
+                           self.prefill_len, self._hp)
 
     # ------------------------------------------------------------------
     # submission
@@ -208,9 +275,12 @@ class ServingEngine:
     # one engine iteration
     # ------------------------------------------------------------------
     def step(self) -> str:
-        """Run one scheduler decision: a prefill chunk (padded mode: an
-        admission flush), a decode step, or nothing ('idle').  Returns
-        which."""
+        """Run one scheduler decision: a packed tick (chunked mode: a
+        prefill chunk; padded mode: an admission flush), a decode step,
+        or nothing ('idle').  Returns which.  In packed mode a tick
+        with nothing prefilling falls through to the plain decode
+        program — both programs live in the compiled-program cache, so
+        alternating kinds never retrace."""
         sch = self._sched
         self._release_arrivals()
         if self.stats.t_start is None:
@@ -219,11 +289,16 @@ class ServingEngine:
         if self.prefill_mode == "padded":
             if sch.want_prefill():
                 return self._padded_flush()
-        else:
+        elif self.prefill_mode == "chunked":
             if sch.want_admit():
                 sch.admit(self.now())      # host-side: assign slots only
             if sch.want_chunk():
                 return self._chunk_step()
+        else:                              # packed: one program per tick
+            if sch.want_admit():
+                sch.admit(self.now())      # host-side: assign slots only
+            if any(st.prefilling for st in sch.active.values()):
+                return self._packed_tick()
 
         decoding = sch.decoding()
         if decoding:
@@ -241,32 +316,101 @@ class ServingEngine:
             self.stats.occupancy.append(len(sch.active) / self.n_slots)
             self.stats.decode_steps += 1
             for st in decoding:
-                t = sample_token(rows[st.slot], st.req.sampling, st.rng)
-                st.generated.append(t)
-                self.stats.generated_tokens += 1
-                if st.ttft is None:
-                    st.ttft = now - st.req.arrival
-                    self.stats.ttft.append(st.ttft)
-                st.pos += 1
-                st.next_token = t
-                if st.finished():
-                    sch.evict(st, now)
-                    self._results[st.req.rid] = st
-                    self.stats.completed += 1
+                self._advance_decode(st, rows[st.slot], now)
             sch.note_decode()
             self.stats.t_end = self.now()
             return "decode"
         return "idle"
 
+    def _advance_decode(self, st, logits_row, now):
+        """Sample one token for a decode-phase request and advance /
+        evict it — shared by the decode step and the packed tick."""
+        t = sample_token(logits_row, st.req.sampling, st.rng)
+        st.generated.append(t)
+        self.stats.generated_tokens += 1
+        if st.ttft is None:
+            st.ttft = now - st.req.arrival
+            self.stats.ttft.append(st.ttft)
+        st.pos += 1
+        st.next_token = t
+        if st.finished():
+            self._sched.evict(st, now)
+            self._results[st.req.rid] = st
+            self.stats.completed += 1
+
+    def _packed_tick(self) -> str:
+        """ONE compiled program for the whole engine tick: every live
+        decode token plus prompt-chunk tokens from every mid-prefill
+        request, flattened into a (token_budget,) ragged batch (dead
+        tail entries pass slot = -1).  Decode rows are sampled from the
+        returned logits; prefill rows only advance their request's
+        offset (the rewind then re-feeds the last prompt token, exactly
+        as in chunked mode, so output stays token-identical)."""
+        sch = self._sched
+        decode, prefill = sch.plan_tick(self.token_budget)
+        tb = self.token_budget
+        tok = np.zeros(tb, np.int32)
+        slot = np.full(tb, -1, np.int32)
+        pos = np.full(tb, -1, np.int32)
+        off = np.full(tb, -1, np.int32)
+        pre = np.zeros(tb, np.int32)
+        i = 0
+        dec_rows = []
+        for st in decode:
+            tok[i], slot[i] = st.next_token, st.slot
+            pos[i] = off[i] = st.pos
+            dec_rows.append((i, st))
+            i += 1
+        n_prefill = 0
+        for st, take in prefill:
+            o = st.nprefilled
+            tok[i:i + take] = st.req.prompt[o:o + take]
+            slot[i:i + take] = st.slot
+            pos[i:i + take] = np.arange(o, o + take)
+            off[i:i + take] = o
+            pre[i:i + take] = 1
+            i += take
+            n_prefill += take
+
+        t0 = self.now()
+        logits, self._cache = self._packed(
+            self.params, self._cache, jnp.asarray(tok), jnp.asarray(slot),
+            jnp.asarray(pos), jnp.asarray(off), jnp.asarray(pre))
+        rows = np.asarray(jax.device_get(logits))
+        now = self.now()
+        self.stats.step_latency.append(now - t0)
+        self.stats.occupancy.append(len(sch.active) / self.n_slots)
+        self.stats.packed_ticks += 1
+        self.stats.packed_decode_tokens += len(dec_rows)
+        self.stats.packed_prefill_tokens += n_prefill
+        self.stats.prefill_tokens += n_prefill
+        for j, st in dec_rows:
+            self._advance_decode(st, rows[j], now)
+        for st, take in prefill:
+            st.nprefilled += take
+            if not st.prefilling:
+                st.begin_decode()          # rewind: re-feed last token
+        self.stats.t_end = self.now()
+        return "packed"
+
     def _chunk_step(self) -> str:
         """Advance EVERY mid-prefill request by one chunk (each at its
-        own offset) in a single compiled call."""
+        own offset) in a single compiled call.  The empty-states guard
+        keeps the no-mid-prefill-no-launch invariant local (the
+        scheduler's ``want_chunk`` enforces it on the step() path; a
+        direct caller gets the same no-op), and the real-vs-padded
+        chunk-token split is tracked so ``EngineStats.summary`` can
+        report how much of each launched ``(n_slots, chunk_len)``
+        program was live work — the waste the FLOP model exposed and
+        packed mode eliminates."""
         sch = self._sched
+        states = sch.prefilling()
+        if not states:                     # nothing mid-prefill: no-op
+            return "idle"
         c = self.chunk_len
         tokens = np.full((self.n_slots, c), self.pad_id, np.int32)
         off = np.full(self.n_slots, -1, np.int32)
         nreal = np.zeros(self.n_slots, np.int32)
-        states = sch.prefilling()
         for st in states:
             take = min(c, len(st.req.prompt) - st.nprefilled)
             tokens[st.slot, :take] = st.req.prompt[
@@ -281,9 +425,12 @@ class ServingEngine:
             if not st.prefilling:
                 st.begin_decode()          # rewind: re-feed last token
         sch.note_chunk()
+        real = int(nreal.sum())
         self.stats.prefills += 1
         self.stats.prefill_chunks += 1
-        self.stats.prefill_tokens += int(nreal.sum())
+        self.stats.prefill_tokens += real
+        self.stats.chunk_tokens_real += real
+        self.stats.chunk_tokens_padded += self.n_slots * c - real
         self.stats.t_end = self.now()
         return "prefill"
 

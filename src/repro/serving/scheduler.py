@@ -2,8 +2,19 @@
 
 FIFO admission over a fixed pool of decode slots.  Admission assigns a
 slot immediately (it is host-side bookkeeping); the prompt is then
-*prefilled in chunks*, and the scheduler interleaves chunk steps with
-decode steps: once streams are decoding, at most one chunk per
+prefilled either *packed* or *in chunks*.
+
+In the default **packed** mode the scheduler is a Sarathi-style
+token-budget planner: ``plan_tick(token_budget)`` gives every decoding
+slot its one decode token first, then fills the remaining budget with
+prompt-chunk tokens across *all* mid-prefill requests (ascending slot
+order) — one flat ragged batch per engine tick, consumed by ONE
+compiled program.  Decode streams are structurally protected (their
+token is always in the tick), so the ``decode_per_prefill`` interleave
+bound is retired in packed mode.
+
+In the legacy **chunked** mode the scheduler interleaves chunk steps
+with decode steps: once streams are decoding, at most one chunk per
 ``decode_per_prefill`` decode steps, so a long prompt (or a burst of
 arrivals) can never starve running streams of decode bandwidth for
 more than a bounded number of steps.  An engine with nothing decoding
@@ -107,7 +118,12 @@ class EngineStats:
     prefills: int = 0                  # prefill program calls (flush/chunk)
     prefill_chunks: int = 0            # chunked-mode calls among them
     prefill_tokens: int = 0            # REAL prompt tokens laid down
+    chunk_tokens_real: int = 0         # real rows×tokens in chunk calls
+    chunk_tokens_padded: int = 0       # padded waste in chunk calls
     decode_steps: int = 0
+    packed_ticks: int = 0              # packed-program calls
+    packed_decode_tokens: int = 0      # real decode tokens packed
+    packed_prefill_tokens: int = 0     # real prompt tokens packed
     completed: int = 0
     generated_tokens: int = 0
     t_start: float | None = None
@@ -134,7 +150,12 @@ class EngineStats:
             "prefills": self.prefills,
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
+            "chunk_tokens_real": self.chunk_tokens_real,
+            "chunk_tokens_padded": self.chunk_tokens_padded,
             "decode_steps": self.decode_steps,
+            "packed_ticks": self.packed_ticks,
+            "packed_decode_tokens": self.packed_decode_tokens,
+            "packed_prefill_tokens": self.packed_prefill_tokens,
         }
 
 
@@ -186,6 +207,30 @@ class FifoScheduler:
         if not self.queue or not self.free_slots:
             return False
         return self._gang_ready() if self.gang else True
+
+    def plan_tick(self, token_budget: int) -> tuple:
+        """Sarathi-style token-budget plan for one packed tick:
+        every decoding slot contributes its one decode token first
+        (structural fairness — decodes are never starved), then the
+        remaining budget fills with prompt-chunk tokens across ALL
+        mid-prefill requests in ascending slot order, each request
+        taking ``min(remaining prompt, remaining budget)``.  Returns
+        ``(decode_states, [(prefill_state, n_tokens), ...])``; the
+        total never exceeds ``token_budget``."""
+        decode = self.decoding()
+        budget = token_budget - len(decode)
+        assert budget >= 0, (
+            f"token_budget {token_budget} < {len(decode)} decoding "
+            "slots — the engine must keep token_budget >= n_slots")
+        prefill = []
+        for st in self.prefilling():
+            if budget <= 0:
+                break
+            take = min(budget, len(st.req.prompt) - st.nprefilled)
+            if take > 0:
+                prefill.append((st, take))
+                budget -= take
+        return decode, prefill
 
     def want_chunk(self) -> bool:
         """Run a prefill chunk now?  Always when nothing is decoding;

@@ -1,17 +1,25 @@
 """Standalone runner: the continuous-batching engine on a (2,4) mesh —
 6 staggered requests through 4 slots must terminate with exactly the
 tokens one-at-a-time serving produces, in BOTH decode modes (exact
-flash-decoding and the paper-faithful prism Segment-Means cache) and
-with the prompt split across MULTIPLE prefill chunks (chunk_len <
-prompt length), so chunk steps of different requests interleave with
-decodes mid-flight.
+flash-decoding and the paper-faithful prism Segment-Means cache), with
+the prompt split across MULTIPLE prefill chunks (chunk_len < prompt
+length) AND in token-packed mode (one ragged mixed prefill+decode
+program per tick, token_budget not a multiple of the live token
+count), so prefill tokens of different requests pack into the same
+tick as in-flight decodes.
 
-Both paths run the identical per-row computation (chunk rows are
-batch-independent, decode rows are owner-masked), so greedy token ids
-match bit-for-bit regardless of which slot a request lands in, which
-other requests share the step, or how its prompt was chunked.  Exact
-mode is additionally pinned against a teacher-forced ``T.forward``
-oracle that shares none of the serving code.
+All paths run the identical per-token computation (packed/chunk rows
+are request-isolated, decode rows are owner-masked, and the cache is
+addressed purely by (slot, position)), so greedy token ids match
+bit-for-bit regardless of which slot a request lands in, which other
+requests share the tick, or how its prompt was split.  Exact mode is
+additionally pinned against a teacher-forced ``T.forward`` oracle
+that shares none of the serving code.
+
+The (2,4) mesh matters doubly for packed mode: the cache batch dim is
+sharded over 'data', so packed tokens must route their writes/reads to
+the one (batch, sequence) shard pair owning their cache address — the
+replicated-token, psum-over-all-axes path this runner pins.
 """
 import os
 import sys
@@ -36,13 +44,15 @@ CFG = ModelConfig(
     tie_embeddings=True)
 
 
-def check(mode: str, chunk_len: int, *, ground_truth: bool = False) -> bool:
+def check(mode: str, chunk_len: int, *, ground_truth: bool = False,
+          prefill_mode: str = "chunked", token_budget: int = 11) -> bool:
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     params = T.init(CFG, jax.random.PRNGKey(0))
     hp = ServeHParams(decode_mode=mode, ssm_chunk=8, means_cr=4.0)
     kw = dict(n_slots=4, prefill_len=32, max_cache=48, hp=hp,
-              chunk_len=chunk_len)
-    tag = f"{mode}/c{chunk_len}"
+              chunk_len=chunk_len, prefill_mode=prefill_mode,
+              token_budget=token_budget)
+    tag = f"{mode}/{prefill_mode}/c{chunk_len}"
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, CFG.vocab_size,
@@ -69,11 +79,17 @@ def check(mode: str, chunk_len: int, *, ground_truth: bool = False) -> bool:
               f"{concurrent[i]} vs {out}")
     s = eng.stats.summary()
     ok &= eng.stats.completed == 6 and s["occupancy"] > 0
-    if chunk_len < 32:
+    if prefill_mode == "packed":
+        # prompts of 8..32 tokens against a ragged budget of 11 mixed
+        # tokens must spread over several packed ticks
+        ok &= s["packed_ticks"] > 6
+        ok &= s["packed_prefill_tokens"] == s["prefill_tokens"]
+    elif chunk_len < 32:
         # prompts of 8..32 tokens at chunk_len < 8 must take > 1 chunk
         ok &= s["prefill_chunks"] > 6
     print(f"[{tag}] occupancy={s['occupancy']:.2f} "
           f"prefills={s['prefills']} chunks={s['prefill_chunks']} "
+          f"packed_ticks={s['packed_ticks']} "
           f"prefill_tokens={s['prefill_tokens']} "
           f"decode_steps={s['decode_steps']}")
 
@@ -97,6 +113,11 @@ def main():
     ok = check("exact", 64)                # clamps to prefill_len: 1 flush
     ok &= check("exact", 8, ground_truth=True)   # 1-4 chunks per prompt
     ok &= check("prism", 8)
+    # token-packed ticks: ragged 11-token budget of mixed prefill +
+    # decode work, batch dim sharded over 'data' — both decode modes,
+    # exact additionally vs the teacher-forced oracle
+    ok &= check("exact", 8, ground_truth=True, prefill_mode="packed")
+    ok &= check("prism", 8, prefill_mode="packed")
     print("ALL OK" if ok else "ENGINE FAILURES")
     sys.exit(0 if ok else 1)
 

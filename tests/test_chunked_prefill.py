@@ -179,7 +179,8 @@ def test_engine_chunk_boundary_prompt_lengths():
     for plen in (4, 8, 3, 5):
         prompt = rng.integers(1, TINY.vocab_size, size=plen).tolist()
         eng = ServingEngine(TINY, mesh, params, n_slots=2, prefill_len=8,
-                            max_cache=24, chunk_len=4)
+                            max_cache=24, chunk_len=4,
+                            prefill_mode="chunked")
         rid = eng.submit(prompt, max_new_tokens=4)
         got = eng.run()[rid]
         seq = list(prompt)

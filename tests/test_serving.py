@@ -269,7 +269,10 @@ def test_engine_six_staggered_requests_match_sequential():
         eng.submit(p, max_new_tokens=6)
     concurrent = eng.run()
     assert eng.stats.completed == 6
-    assert eng.stats.prefills >= 2         # late arrivals joined mid-flight
+    # late arrivals joined mid-flight: their prompt tokens packed into
+    # ticks beyond the opening burst (default mode is 'packed')
+    assert eng.stats.packed_ticks >= 2
+    assert eng.stats.packed_prefill_tokens == sum(len(p) for p in prompts)
 
     seq_eng = _engine(params, mesh)
     for i, p in enumerate(prompts):
