@@ -91,6 +91,20 @@ def compare(decode_base, decode_cur, engine_base, engine_cur,
          eg.get("packed_ttft_no_worse_saturated", False),
          "packed TTFT p50 <= chunked TTFT p50 on the saturated trace")
 
+    # -- paged prefix reuse: structural --------------------------------
+    gate("engine/prefix_token_match",
+         eg.get("prefix_token_match", False),
+         "prefix-cache ON token-identical to OFF on the shared-prefix "
+         "trace (COW never corrupts)")
+    gate("engine/prefix_reuse_savings",
+         eg.get("prefix_reuse_savings", 0.0) > 0,
+         f"prefix reuse saved "
+         f"{100 * eg.get('prefix_reuse_savings', 0.0):.1f}% of prefill "
+         f"tokens ({eg.get('prefix_hits', 0)} hits; must be > 0)")
+    gate("engine/prefix_ttft_no_worse",
+         eg.get("prefix_ttft_no_worse", False),
+         "prefix-ON TTFT p50 <= OFF on the shared-prefix trace")
+
     # -- engine bench: logical-clock throughput vs baseline ------------
     for mode in ("packed", "chunked"):
         cur = engine_cur["traces"]["main"][mode]["requests_per_ksteps"]

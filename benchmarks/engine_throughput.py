@@ -16,11 +16,14 @@ differ only in admission policy:
   * gang    — classic static batching (admit into an empty pool only,
               drain completely): the head-of-line-blocking baseline
 
-Three traces: the moderate-load ``main`` trace (chat regime), the
-``short``-prompt trace (pad-to-length waste), and the ``saturated``
-trace (arrivals far above the service rate — the regime where PR-4's
-FLOP clock recorded gang flushes out-amortizing per-row chunk calls,
-and where token packing closes that gap).
+Four traces: the moderate-load ``main`` trace (chat regime), the
+``short``-prompt trace (pad-to-length waste), the ``saturated`` trace
+(arrivals far above the service rate — the regime where PR-4's FLOP
+clock recorded gang flushes out-amortizing per-row chunk calls, and
+where token packing closes that gap), and the shared-``prefix`` trace
+(every prompt opens with the same system prompt; the paged engine's
+prefix cache maps the shared pages copy-on-write and must cut prefill
+work without changing a token).
 
 To keep the comparison deterministic on noisy shared CPUs — and
 gateable in CI (``benchmarks/compare.py``) — the engines run on a
@@ -104,11 +107,11 @@ def prefill_flops_per_request(cfg, plens, mode: str) -> float:
     return total / max(1, len(plens))
 
 
-def build_engine(mode: str):
+def build_engine(mode: str, *, prefix_cache: bool | None = None):
     import jax
     from repro.models import transformer as T
     from repro.runtime.serve import ServeHParams
-    from repro.serving import ServingEngine
+    from repro.serving import EngineConfig, ServingEngine
 
     cfg = bench_config()
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -116,14 +119,14 @@ def build_engine(mode: str):
     clock = StepClock()
     prefill_mode = {"packed": "packed", "padded": "padded"}.get(
         mode, "chunked")
-    eng = ServingEngine(
-        cfg, mesh, params, n_slots=N_SLOTS, prefill_len=PREFILL_LEN,
-        max_cache=MAX_CACHE,
+    ecfg = EngineConfig(
+        n_slots=N_SLOTS, prefill_len=PREFILL_LEN, max_cache=MAX_CACHE,
         hp=ServeHParams(decode_mode="exact", ssm_chunk=8),
         decode_per_prefill=DECODE_PER_PREFILL,
         chunk_len=CHUNK_LEN, token_budget=TOKEN_BUDGET,
-        prefill_mode=prefill_mode,
-        gang=(mode == "gang"), clock=clock)
+        prefill_mode=prefill_mode, gang=(mode == "gang"),
+        prefix_cache=prefix_cache)
+    eng = ServingEngine(cfg, mesh, params, ecfg, clock=clock)
     return eng, clock, cfg
 
 
@@ -142,7 +145,29 @@ def make_trace(cfg, *, n_requests, arrival_gap, plen_range, gen_range,
     return out
 
 
-def run_trace(mode: str, trace, costs) -> tuple:
+def make_prefix_trace(cfg, *, n_requests, arrival_gap, prefix_len,
+                      suffix_range, gen_range, seed=0):
+    """System-prompt trace: every request's prompt opens with the SAME
+    ``prefix_len``-token prefix (a shared system prompt) followed by a
+    short random suffix.  Arrivals are spaced so requests mostly
+    serialize — the first completion registers the prefix pages, every
+    later admission maps them copy-on-write and skips prefilling the
+    covered tokens."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size, size=prefix_len).tolist()
+    arrivals = np.cumsum(rng.exponential(arrival_gap, size=n_requests))
+    out = []
+    for i in range(n_requests):
+        suffix = rng.integers(1, cfg.vocab_size,
+                              size=int(rng.integers(*suffix_range)))
+        out.append((float(arrivals[i]), prefix + suffix.tolist(),
+                    int(rng.integers(*gen_range))))
+    return out
+
+
+def run_trace(mode: str, trace, costs, *,
+              prefix_cache: bool | None = None) -> tuple:
     """Drive one engine over a trace on the analytic logical clock.
     Returns (logical metrics plus measured wall ms per step kind,
     {trace index: generated token ids}) — the token lists let the
@@ -151,7 +176,7 @@ def run_trace(mode: str, trace, costs) -> tuple:
     from repro.serving import EngineStats, SamplingParams
     from .common import packed_step_flops
 
-    eng, clock, cfg = build_engine(mode)
+    eng, clock, cfg = build_engine(mode, prefix_cache=prefix_cache)
     # compile warmup outside the measured window (one multi-chunk
     # prompt + one short, through eviction)
     eng.submit(list(range(1, 20)), max_new_tokens=2)
@@ -212,6 +237,9 @@ def run_trace(mode: str, trace, costs) -> tuple:
         "packed_ticks": s["packed_ticks"],
         "packed_decode_tokens": s["packed_decode_tokens"],
         "packed_prefill_tokens": s["packed_prefill_tokens"],
+        "out_of_pages": s["out_of_pages"],
+        "prefix_hits": s["prefix_hits"],
+        "prefix_tokens_saved": s["prefix_tokens_saved"],
         "elapsed_steps": steps,
         "wall_decode_ms": med(wall["decode"]),
         "wall_prefill_ms": med(wall["prefill"]),
@@ -223,26 +251,35 @@ def packed_cache_sized_concats() -> int:
     """Structural proof that the packed program never materializes a
     cache-sized concatenate: walk the traced jaxpr (same technique as
     the decode microbench) and count concatenate eqns whose output
-    carries >= MAX_CACHE elements in any dim."""
+    carries >= MAX_CACHE elements in any dim.  Walks the PAGED packed
+    program — the production default — so the page-indirection gathers
+    are covered by the gate too."""
     import jax
     import jax.numpy as jnp
     import numpy as np
     from repro.models import transformer as T
-    from repro.runtime.serve import (ServeHParams, init_cache,
-                                     make_packed_step)
+    from repro.runtime.paging import make_paged_layout
+    from repro.runtime.serve import (ServeHParams, make_kv_cache,
+                                     make_layout, make_packed_step)
 
     cfg = bench_config()
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     params = T.init(cfg, jax.random.PRNGKey(0))
     hp = ServeHParams(decode_mode="exact", ssm_chunk=8)
+    base = make_layout(cfg, mesh, N_SLOTS, MAX_CACHE, hp, PREFILL_LEN)
+    paging = make_paged_layout(base, page_tokens=16, n_pages=None,
+                               n_slots=N_SLOTS)
     step, lay, _, _ = make_packed_step(
         cfg, mesh, params, batch=N_SLOTS, cap=MAX_CACHE,
-        prefill_len=PREFILL_LEN, token_budget=TOKEN_BUDGET, hp=hp)
-    cache = init_cache(cfg, lay, N_SLOTS, hp)
+        prefill_len=PREFILL_LEN, token_budget=TOKEN_BUDGET, hp=hp,
+        paging=paging)
+    kv = make_kv_cache(cfg, mesh, lay, N_SLOTS, hp, paging=paging)
     tb = TOKEN_BUDGET
-    args = (params, cache, jnp.zeros(tb, jnp.int32),
+    args = (params, kv.storage, jnp.zeros(tb, jnp.int32),
             jnp.full(tb, -1, jnp.int32), jnp.full(tb, -1, jnp.int32),
-            jnp.full(tb, -1, jnp.int32), jnp.zeros(tb, jnp.int32))
+            jnp.full(tb, -1, jnp.int32), jnp.zeros(tb, jnp.int32),
+            jnp.asarray(kv.page_map(N_SLOTS)),
+            jnp.asarray(kv.state_map(N_SLOTS)))
 
     def walk(jx):
         n = 0
@@ -292,12 +329,32 @@ def run_all() -> dict:
             res[trace_name][m], toks[trace_name][m] = run_trace(
                 m, trace, costs)
 
+    # shared-prefix (system-prompt) trace: identical trace through the
+    # packed engine with prefix reuse ON vs OFF — the tokens must match
+    # exactly and ON must prefill strictly fewer prompt tokens
+    prefix_trace = make_prefix_trace(
+        cfg, n_requests=12, arrival_gap=120.0, prefix_len=24,
+        suffix_range=(4, 9), gen_range=(8, 17), seed=3)
+    res["prefix"], toks["prefix"] = {}, {}
+    for name, on in (("prefix_on", True), ("prefix_off", False)):
+        res["prefix"][name], toks["prefix"][name] = run_trace(
+            "packed", prefix_trace, costs, prefix_cache=on)
+
     flops = {}
     for trace_name, trace in (("main", main_trace),
                               ("short", short_trace)):
         for m in ("packed", "chunked", "padded"):
             flops[f"{trace_name}_{m}"] = prefill_flops_per_request(
                 cfg, [len(p) for _, p, _ in trace], m)
+    # measured (not analytic) prefill work on the prefix trace: packed
+    # pays one query per token it ACTUALLY prefills, so per-request
+    # FLOPs scale down with the prefix tokens never laid down
+    from .common import serve_step_flops
+    per_tok = serve_step_flops(cfg, rows=1, nq_per_row=1, m=PREFILL_LEN)
+    for name in ("prefix_on", "prefix_off"):
+        flops[f"prefix_{name}"] = (
+            per_tok * res["prefix"][name]["prefill_tokens"]
+            / len(prefix_trace))
 
     n_concats = packed_cache_sized_concats()
     gates = {
@@ -345,6 +402,21 @@ def run_all() -> dict:
             res["saturated"]["packed"]["requests_per_ksteps"]
             / max(res["saturated"]["gang"]["requests_per_ksteps"],
                   1e-9)),
+        # ---- prefix-reuse gates --------------------------------------
+        # COW sharing must not change a single token ...
+        "prefix_token_match": all(
+            toks["prefix"]["prefix_on"][i] == toks["prefix"]["prefix_off"][i]
+            for i in range(len(prefix_trace))),
+        # ... while strictly reducing the prompt tokens prefilled (the
+        # saved fraction of the OFF run's prefill work)
+        "prefix_reuse_savings": (
+            (res["prefix"]["prefix_off"]["prefill_tokens"]
+             - res["prefix"]["prefix_on"]["prefill_tokens"])
+            / max(res["prefix"]["prefix_off"]["prefill_tokens"], 1)),
+        "prefix_hits": res["prefix"]["prefix_on"]["prefix_hits"],
+        "prefix_ttft_no_worse": (
+            res["prefix"]["prefix_on"]["ttft_p50_steps"]
+            <= res["prefix"]["prefix_off"]["ttft_p50_steps"] + 1e-9),
     }
     return {
         "bench": "engine_throughput",
@@ -388,13 +460,26 @@ def main(report):
                f"{s['ttft_p50_steps']:.1f}")
         report(f"engine/short/{name}/prefill_mflops_per_req", 0.0,
                f"{flops['short_' + name] / 1e6:.2f}")
+    for name in ("prefix_on", "prefix_off"):
+        s = res["prefix"][name]
+        report(f"engine/prefix/{name}/ttft_p50_steps", 0.0,
+               f"{s['ttft_p50_steps']:.1f}")
+        report(f"engine/prefix/{name}/prefill_tokens", 0.0,
+               f"{s['prefill_tokens']} (hits {s['prefix_hits']}, "
+               f"saved {s['prefix_tokens_saved']})")
+        report(f"engine/prefix/{name}/prefill_mflops_per_req", 0.0,
+               f"{flops['prefix_' + name] / 1e6:.2f}")
     g = payload["gates"]
     for gate in ("short_prefill_flops_lower", "short_ttft_no_worse",
                  "chunked_vs_padded_ttft_no_worse", "packed_token_match",
                  "packed_concat_free", "packed_vs_chunked_no_regression",
                  "packed_vs_gang_saturated",
-                 "packed_ttft_no_worse_saturated"):
+                 "packed_ttft_no_worse_saturated", "prefix_token_match",
+                 "prefix_ttft_no_worse"):
         report(f"engine/gate/{gate}", 0.0, str(g[gate]))
+    report("engine/prefix_reuse_savings", 0.0,
+           f"{100 * g['prefix_reuse_savings']:.1f}% of prefill tokens "
+           f"({g['prefix_hits']} hits)")
     report("engine/continuous_vs_static_ttft_speedup", 0.0,
            f"x{g['continuous_vs_gang_ttft_speedup']:.2f}")
     report("engine/continuous_vs_static_speedup", 0.0,
@@ -428,5 +513,7 @@ if __name__ == "__main__":
             and g["packed_token_match"] and g["packed_concat_free"]
             and g["packed_vs_chunked_no_regression"]
             and g["packed_vs_gang_saturated"]
-            and g["packed_ttft_no_worse_saturated"]):
+            and g["packed_ttft_no_worse_saturated"]
+            and g["prefix_token_match"] and g["prefix_ttft_no_worse"]
+            and g["prefix_reuse_savings"] > 0):
         sys.exit(1)

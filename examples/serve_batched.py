@@ -19,8 +19,8 @@ def main():
     from repro.configs import get_config
     from repro.core.protocol import PrismConfig
     from repro.models import transformer as T
-    from repro.runtime.serve import (ServeHParams, grow_cache,
-                                     make_prefill_step, make_serve_step)
+    from repro.runtime.serve import (ServeHParams, make_prefill_step,
+                                     make_serve_step)
 
     if len(jax.devices()) < 8:
         print("set XLA_FLAGS=--xla_force_host_platform_device_count=8")
@@ -39,11 +39,11 @@ def main():
         prism = PrismConfig(
             P=4, cr=4.0, mode="prism" if mode == "prism" else "voltage")
         prefill, lay_p, _, _ = make_prefill_step(
-            cfg, mesh, params, prism, batch=B, n=n, hp=hp)
+            cfg, mesh, params, prism, batch=B, n=n, hp=hp, cap=cap)
         logits, cache = prefill(params, {"tokens": prompts})
         step, lay_d, _, _ = make_serve_step(
             cfg, mesh, params, batch=B, cap=cap, prefill_len=n, hp=hp)
-        cache = grow_cache(cache, lay_p, lay_d)
+        assert lay_p == lay_d
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         toks = [np.asarray(tok)]
         for g in range(gen - 1):

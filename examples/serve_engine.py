@@ -22,7 +22,7 @@ def main():
     from repro.configs import get_config
     from repro.models import transformer as T
     from repro.runtime.serve import ServeHParams
-    from repro.serving import SamplingParams, ServingEngine
+    from repro.serving import EngineConfig, SamplingParams, ServingEngine
 
     if len(jax.devices()) < 8:
         print("set XLA_FLAGS=--xla_force_host_platform_device_count=8")
@@ -31,9 +31,11 @@ def main():
     cfg = get_config("gpt2-small").reduced()
     params = T.init(cfg, jax.random.PRNGKey(0))
 
-    eng = ServingEngine(cfg, mesh, params, n_slots=4, prefill_len=32,
-                        max_cache=48,
-                        hp=ServeHParams(decode_mode="exact", ssm_chunk=8))
+    # EngineConfig is the one construction path: paged page-table cache
+    # and (in exact mode) shared-prefix reuse are on by default
+    eng = ServingEngine(cfg, mesh, params, EngineConfig(
+        n_slots=4, prefill_len=32, max_cache=48,
+        hp=ServeHParams(decode_mode="exact", ssm_chunk=8)))
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab_size,
@@ -56,6 +58,8 @@ def main():
     for k, v in eng.stats.summary().items():
         print(f"[demo] {k:22s} {v:.4f}" if isinstance(v, float)
               else f"[demo] {k:22s} {v}")
+    for k, v in eng.kv_cache.stats().items():
+        print(f"[demo] kv/{k:19s} {v}")
 
 
 if __name__ == "__main__":

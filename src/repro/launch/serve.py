@@ -60,6 +60,18 @@ def main():
                     help="[engine, packed] tokens per packed tick "
                          "(default: slots + chunk-len); must be >= the "
                          "slot count")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="[engine] dense slot-row cache instead of the "
+                         "paged page-table pool")
+    ap.add_argument("--page-tokens", type=int, default=None,
+                    help="[engine, paged] page size in token positions "
+                         "(default: derived, ~16-token spans)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="[engine, paged] physical pool pages (default: "
+                         "memory parity with the dense rows)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="[engine, paged] disable shared-prefix COW "
+                         "reuse (on by default in exact decode mode)")
     args = ap.parse_args()
 
     import jax
@@ -67,8 +79,8 @@ def main():
     from repro.configs import get_config
     from repro.core.protocol import PrismConfig
     from repro.models import transformer as T
-    from repro.runtime.serve import (ServeHParams, grow_cache,
-                                     make_prefill_step, make_serve_step)
+    from repro.runtime.serve import (ServeHParams, make_prefill_step,
+                                     make_serve_step)
 
     data, model = (int(x) for x in args.mesh.split("x"))
     mesh = jax.make_mesh((data, model), ("data", "model"))
@@ -94,13 +106,16 @@ def main():
         mode="prism" if args.decode_mode == "prism" else "voltage")
 
     if args.engine:
-        from repro.serving import SamplingParams, ServingEngine
-        eng = ServingEngine(cfg, mesh, params, n_slots=args.batch,
-                            prefill_len=n, max_cache=cap, hp=hp,
-                            prism=prism, gang=args.gang,
-                            chunk_len=args.chunk_len,
-                            prefill_mode=args.prefill_mode,
-                            token_budget=args.token_budget)
+        from repro.serving import EngineConfig, SamplingParams, ServingEngine
+        ecfg = EngineConfig(
+            n_slots=args.batch, prefill_len=n, max_cache=cap, hp=hp,
+            prism=prism, gang=args.gang, chunk_len=args.chunk_len,
+            prefill_mode=args.prefill_mode,
+            token_budget=args.token_budget,
+            paged=not args.no_paged, page_tokens=args.page_tokens,
+            n_pages=args.n_pages,
+            prefix_cache=False if args.no_prefix_cache else None)
+        eng = ServingEngine(cfg, mesh, params, ecfg)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
                                              size=args.requests))
@@ -123,8 +138,10 @@ def main():
     prompts = np.random.default_rng(0).integers(
         1, cfg.vocab_size, size=(args.batch, n)).astype(np.int32)
 
+    # the prefill program captures its cache rows straight at decode
+    # capacity (cap=...), so the old grow-to-capacity pad is gone
     prefill, lay_p, _, _ = make_prefill_step(
-        cfg, mesh, params, prism, batch=args.batch, n=n, hp=hp)
+        cfg, mesh, params, prism, batch=args.batch, n=n, hp=hp, cap=cap)
     t0 = time.time()
     logits, cache = prefill(params, {"tokens": jnp.asarray(prompts)})
     logits.block_until_ready()
@@ -133,7 +150,7 @@ def main():
 
     step, lay_d, _, _ = make_serve_step(
         cfg, mesh, params, batch=args.batch, cap=cap, prefill_len=n, hp=hp)
-    cache = grow_cache(cache, lay_p, lay_d)
+    assert lay_p == lay_d, (lay_p, lay_d)
 
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     out = [np.asarray(tok)]

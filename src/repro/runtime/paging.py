@@ -1,0 +1,653 @@
+"""Paged KV cache: host-side page table, prefix reuse, and the unified
+``KVCache`` lifecycle object.
+
+The serving cache used to be a dense ``(n_slots, max_cache)`` rowset:
+every request owned one fixed row, context length was capped by the
+row, admission paid an ``insert_cache_row`` splice, and identical
+system prompts were prefillled once per request.  This module replaces
+that with a vLLM/levanter-style **block table**:
+
+  * the device pool holds ``n_pages`` physical pages; a page is a gang
+    of ``page_cols`` cache columns *on every sequence shard* (so one
+    page covers ``page_cols * n_seq`` consecutive token positions under
+    the round-robin placement, and the pool leaf is
+    ``(n_pages, page_cols * n_seq, Hkv, hd)`` sharded over the sequence
+    axes exactly like the old rows);
+  * ``PageTable`` is the host-side allocator: free list, per-page
+    refcounts, O(1) alloc/free — pure bookkeeping, no device work;
+  * a request's "row" is a **page list**: logical page slot ``j`` of
+    its virtual ``cap_l``-column row is backed by physical page
+    ``pages[j]``.  The step programs in ``runtime.serve`` receive the
+    per-slot page map ``(n_slots, pages_per_row)`` each tick and gather
+    / scatter through one extra level of indirection;
+  * **prefix caching**: completed prompts register their full pages
+    under a rolling token hash; a new request whose prompt starts with
+    a registered prefix maps those pages copy-on-write (refcount++) and
+    skips prefilling the covered tokens entirely.  Shared pages are
+    never written — writes only target positions past the covered
+    boundary, which live in private pages by construction — and
+    ``KVCache.fork_cow`` / ``ensure_writable`` copy a page out to a
+    private one if a write would ever land in a shared page (the
+    safety valve for future preemption/offload policies);
+  * in ``prism`` decode mode the Segment-Means running state
+    (kz/vz/gz/zsum) rides in its own **state-page pool**
+    ``(n_state_pages, m, ...)``: each active request holds one state
+    page (allocated/freed with its KV pages, addressed through the
+    per-slot ``state_map``), so ROADMAP's KV-offload tier can spill and
+    restore a request's *entire* cache footprint — raw KV pages plus
+    compression state — through one indirection layer.
+
+``KVCache`` is the single construction path for BOTH cache layouts:
+``paging=None`` wraps the legacy dense rowset (kept as the oracle the
+equivalence tests compare against) and absorbs the old free functions
+(``insert_cache_row``/``grow_cache``/``reset_cache_row`` are now
+deprecated shims over the ``insert_row``/``grow_from``/``reset_row``
+methods); ``paging=PagedLayout(...)`` wraps the pool + ``PageTable``
+with the ``alloc / append / fork_cow / free`` lifecycle the engine
+drives.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax import lax
+
+
+#: page id meaning "no page mapped" in device page maps
+NO_PAGE = -1
+
+
+# --------------------------------------------------------------------------
+# dense-rowset primitives (the former serve.py free functions)
+# --------------------------------------------------------------------------
+
+def splice_row(dst, src, src_row, dst_row):
+    """Copy batch row ``src_row`` of cache ``src`` into row ``dst_row``
+    of ``dst`` — a batch-dim ``dynamic_update_slice`` on every leaf.
+    Stacked 'scan' leaves are (n_units, B, ...) — batch axis 1; 'tail'
+    leaves are (B, ...) — batch axis 0."""
+    def one(d, s, batch_axis):
+        row = lax.dynamic_slice_in_dim(s, src_row, 1, axis=batch_axis)
+        return lax.dynamic_update_slice_in_dim(
+            d, row.astype(d.dtype), dst_row, axis=batch_axis)
+    return {"scan": [jax.tree.map(lambda d, s: one(d, s, 1), dc, sc)
+                     for dc, sc in zip(dst["scan"], src["scan"])],
+            "tail": [jax.tree.map(lambda d, s: one(d, s, 0), dc, sc)
+                     for dc, sc in zip(dst["tail"], src["tail"])]}
+
+
+def grow_rows(cache, lay_from, lay_to):
+    """Pad a prefill cache (cap == prefill_len) out to a larger decode
+    capacity; only the sequence-sharded k/v leaves grow (per-shard
+    interleaved pad)."""
+    pad = lay_to.cap_l - lay_from.cap_l
+    if pad == 0:
+        return cache
+
+    def fix(d):
+        import jax.numpy as jnp
+        out = {}
+        for key, v in d.items():
+            sd = v.ndim - 3
+            if key in ("k", "v") and v.shape[sd] == lay_from.cap:
+                lead = v.shape[:sd]
+                v = v.reshape(*lead, lay_from.n_seq, lay_from.cap_l,
+                              *v.shape[sd + 1:])
+                widths = [(0, 0)] * v.ndim
+                widths[sd + 1] = (0, pad)
+                v = jnp.pad(v, widths)
+                v = v.reshape(*lead, lay_to.cap, *v.shape[sd + 2:])
+            out[key] = v
+        return out
+    return {"scan": [fix(c) for c in cache["scan"]],
+            "tail": [fix(c) for c in cache["tail"]]}
+
+
+def zero_row(cache, row):
+    """Zero one batch row of a dense decode cache."""
+    import jax.numpy as jnp
+
+    def one_tree(tree, batch_axis):
+        def fix(c):
+            sh = list(c.shape)
+            sh[batch_axis] = 1
+            return lax.dynamic_update_slice_in_dim(
+                c, jnp.zeros(sh, c.dtype), row, axis=batch_axis)
+        return jax.tree.map(fix, tree)
+    return {"scan": [one_tree(t, 1) for t in cache["scan"]],
+            "tail": [one_tree(t, 0) for t in cache["tail"]]}
+
+
+# --------------------------------------------------------------------------
+# paged layout + page table
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PagedLayout:
+    """Static shape of the paged pool, derived once per engine.
+
+    A page holds ``page_cols`` per-shard cache columns on EVERY
+    sequence shard, i.e. ``span = page_cols * n_seq`` consecutive token
+    positions under the round-robin paged placement (exact mode).  The
+    prism paged placement keeps the prefill-aligned column map (the
+    Segment-Means shard ownership needs contiguous per-shard position
+    blocks), where a page gang still holds ``page_cols`` columns per
+    shard — prefix sharing is disabled there (a partial page set does
+    not cover a position prefix)."""
+    page_cols: int                    # per-shard columns per page
+    n_seq: int                        # sequence shards (gang width)
+    pages_per_row: int                # logical page slots per request
+    n_pages: int                      # physical pages in the pool
+    n_state_pages: int = 0            # prism means-state pool rows
+
+    @property
+    def span(self) -> int:            # tokens covered per page
+        return self.page_cols * self.n_seq
+
+    @property
+    def pool_cap(self) -> int:        # global pool columns (dim 1)
+        return self.page_cols * self.n_seq
+
+
+def make_paged_layout(lay, *, page_tokens: int, n_pages: int | None,
+                      n_slots: int, n_state_pages: int | None = None
+                      ) -> PagedLayout:
+    """Derive the pool shape from a ``ServeLayout``.  ``page_tokens``
+    is the page size in token positions; it must be a multiple of the
+    sequence-shard count and the resulting per-shard ``page_cols`` must
+    divide both the prefill region and the full row (so chunk prior
+    reads and row gathers stay static slices of whole pages)."""
+    if page_tokens % lay.n_seq:
+        raise ValueError(
+            f"page_tokens {page_tokens} not a multiple of the "
+            f"sequence-shard count {lay.n_seq}")
+    pc = page_tokens // lay.n_seq
+    if lay.n_loc0 % pc or lay.cap_l % pc:
+        raise ValueError(
+            f"page_cols {pc} must divide the per-shard prefill region "
+            f"{lay.n_loc0} and capacity {lay.cap_l}")
+    ppr = lay.cap_l // pc
+    if n_pages is None:
+        n_pages = n_slots * ppr       # memory parity with the dense rows
+    if n_state_pages is None:
+        n_state_pages = n_slots
+    return PagedLayout(page_cols=pc, n_seq=lay.n_seq, pages_per_row=ppr,
+                       n_pages=int(n_pages),
+                       n_state_pages=int(n_state_pages))
+
+
+class PageTable:
+    """Host-side free-list page allocator with per-page refcounts.
+
+    Pure bookkeeping — no device arrays.  A page is either on the free
+    list (refcount 0) or owned by one or more holders (a request's page
+    list and/or a prefix-cache entry), each holding exactly one
+    refcount.  ``check()`` asserts the invariant; the churn tests drive
+    admit/evict/requeue loops through it."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 1
+        self.n_pages = n_pages
+        self.refs = np.zeros(n_pages, np.int32)
+        self._free: list = list(range(n_pages))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> list | None:
+        """Take ``n`` fresh pages (refcount 1 each) or None if the free
+        list cannot cover them — never a partial grant."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self.refs[pages] += 1
+        return pages
+
+    def share(self, pages) -> None:
+        """Add one reference to each (already-allocated) page — the
+        copy-on-write map of a shared prefix into a new request."""
+        pages = list(pages)
+        if np.any(self.refs[pages] <= 0):
+            raise ValueError(f"share of unallocated page in {pages}")
+        self.refs[pages] += 1
+
+    def free(self, pages) -> None:
+        """Drop one reference per page; pages reaching refcount 0 go
+        back on the free list."""
+        for p in pages:
+            if self.refs[p] <= 0:
+                raise ValueError(f"double free of page {p}")
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                self._free.append(p)
+
+    def check(self) -> None:
+        """Invariants: refcounts non-negative, free list is exactly the
+        zero-ref pages, no duplicates."""
+        free = sorted(self._free)
+        assert len(set(free)) == len(free), "duplicate free-list entry"
+        zero = sorted(np.nonzero(self.refs == 0)[0].tolist())
+        assert free == zero, (free, zero)
+        assert np.all(self.refs >= 0)
+
+
+# --------------------------------------------------------------------------
+# prefix cache
+# --------------------------------------------------------------------------
+
+@dataclass
+class _PrefixEntry:
+    key: tuple
+    pages: tuple                       # physical ids, one per full span
+    tokens: int                        # positions covered (= len(pages)*span)
+    last_used: int = 0
+
+
+class PrefixCache:
+    """Token-hash → shared-page-prefix map (vLLM-style block hashing).
+
+    A finished request registers one entry per full-page prefix level
+    of its prompt: level ``k`` maps ``hash(prompt[:k*span])`` to its
+    first ``k`` physical pages (each entry holds one refcount per
+    page, so registered pages survive the owner's eviction).  Lookup
+    walks levels longest-first; a hit maps the entry's pages
+    copy-on-write into the new request.  ``reclaim`` drops LRU entries
+    to refill the free list when admission runs out of pages — the
+    prefix cache is a cache, never a reservation."""
+
+    def __init__(self, table: PageTable):
+        self.table = table
+        self.entries: dict = {}        # key -> _PrefixEntry
+        self.hits = 0
+        self.misses = 0
+        self._tick = 0
+
+    @staticmethod
+    def _key(prompt, n_tokens: int) -> tuple:
+        return tuple(prompt[:n_tokens])
+
+    def register(self, prompt, pages, span: int) -> int:
+        """Register every full-page prefix level of ``prompt`` whose
+        pages hold prompt tokens only.  Returns entries added."""
+        k_reg = min(len(prompt) // span, len(pages))
+        added = 0
+        for k in range(1, k_reg + 1):
+            key = self._key(prompt, k * span)
+            ent = self.entries.get(key)
+            self._tick += 1
+            if ent is not None:
+                ent.last_used = self._tick
+                continue
+            share = list(pages[:k])
+            self.table.share(share)
+            self.entries[key] = _PrefixEntry(
+                key=key, pages=tuple(share), tokens=k * span,
+                last_used=self._tick)
+            added += 1
+        return added
+
+    def lookup(self, prompt, span: int) -> _PrefixEntry | None:
+        """Longest registered full-page prefix STRICTLY shorter than
+        the prompt (the rewind re-feeds the last prompt token, so the
+        page holding position ``len(prompt) - 1`` must stay private)."""
+        k_max = (len(prompt) - 1) // span
+        for k in range(k_max, 0, -1):
+            ent = self.entries.get(self._key(prompt, k * span))
+            if ent is not None:
+                self._tick += 1
+                ent.last_used = self._tick
+                self.hits += 1
+                return ent
+        self.misses += 1
+        return None
+
+    def reclaim(self, need_free: int) -> int:
+        """Evict LRU entries until the table's free list holds at least
+        ``need_free`` pages (or the cache is empty).  Returns entries
+        dropped."""
+        dropped = 0
+        while (self.table.free_pages < need_free and self.entries):
+            key = min(self.entries, key=lambda k: self.entries[k].last_used)
+            self.table.free(list(self.entries.pop(key).pages))
+            dropped += 1
+        return dropped
+
+    def clear(self) -> None:
+        for ent in self.entries.values():
+            self.table.free(list(ent.pages))
+        self.entries.clear()
+
+
+# --------------------------------------------------------------------------
+# the unified cache object
+# --------------------------------------------------------------------------
+
+@dataclass
+class AdmitPlan:
+    """What admitting one request would take / reuse."""
+    total_pages: int                   # logical pages the request needs
+    fresh_pages: int                   # pages to pull off the free list
+    shared: tuple = ()                 # prefix pages mapped COW
+    covered: int = 0                   # prompt tokens already in cache
+
+
+@dataclass
+class KVCache:
+    """One cache object, one lifecycle: ``alloc -> append/fork -> free``.
+
+    Wraps the device storage pytree plus, in paged mode, the
+    ``PageTable`` / ``PrefixCache`` and the per-slot page lists.  The
+    legacy dense rowset (``paging=None``) lives behind the same object
+    so the engine has a single construction path and the equivalence
+    oracles keep running; its ``grow_from``/``insert_row``/``reset_row``
+    methods replace the old module-level free functions.
+
+    Build via ``runtime.serve.make_kv_cache`` (which owns the shape /
+    sharding derivation) — this class never imports the runtime."""
+    storage: object                    # device pytree (dense or pooled)
+    layout: object                     # ServeLayout
+    paging: PagedLayout | None = None
+    sharding: object = None            # pytree of NamedShardings
+    table: PageTable | None = None
+    prefix: PrefixCache | None = None
+    slot_pages: dict = field(default_factory=dict)   # slot -> [page ids]
+    slot_state: dict = field(default_factory=dict)   # slot -> state row
+    _state_free: list = field(default_factory=list)
+    _reserved: dict = field(default_factory=dict)    # key -> (pages, srow)
+    _jit_cache: dict = field(default_factory=dict)
+    cow_copies: int = 0                # pages forked private on write
+
+    def __post_init__(self):
+        if self.paging is not None:
+            if self.table is None:
+                self.table = PageTable(self.paging.n_pages)
+            self._state_free = list(range(self.paging.n_state_pages))
+
+    # -- paged lifecycle ---------------------------------------------------
+    @property
+    def paged(self) -> bool:
+        return self.paging is not None
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.paging.span)
+
+    def plan(self, prompt, max_new_tokens: int,
+             use_prefix: bool = True, full_row: bool = False) -> AdmitPlan:
+        """Pages required to serve ``prompt`` + generation, after
+        prefix reuse.  Host-side only — commits nothing.  ``full_row``
+        allocates the whole logical row (paged prism: the means state
+        is defined over the full prefill region, so rows are never
+        partial and prefixes are never shared)."""
+        total = (self.paging.pages_per_row if full_row
+                 else self.pages_needed(len(prompt) + max_new_tokens))
+        shared, covered = (), 0
+        if use_prefix and not full_row and self.prefix is not None:
+            ent = self.prefix.lookup(prompt, self.paging.span)
+            if ent is not None:
+                shared, covered = ent.pages, ent.tokens
+        return AdmitPlan(total_pages=total,
+                         fresh_pages=total - len(shared),
+                         shared=shared, covered=covered)
+
+    def can_admit(self, plan: AdmitPlan, *, reclaim: bool = True) -> bool:
+        """Free-list check for one plan; optionally reclaims LRU prefix
+        entries to make room.  The scheduler's page-aware admission
+        gate."""
+        if self.table.free_pages >= plan.fresh_pages \
+                and self._state_free:
+            return True
+        if reclaim and self.prefix is not None:
+            self.prefix.reclaim(plan.fresh_pages)
+        return (self.table.free_pages >= plan.fresh_pages
+                and bool(self._state_free))
+
+    def reserve(self, key, plan: AdmitPlan) -> bool:
+        """Phase one of admission: commit the plan's pages to ``key``
+        (the request id) WITHOUT binding a slot yet.  All-or-nothing;
+        returns False (committing nothing) when the free list or the
+        state pool cannot cover it.  Reserving at the admission gate —
+        before the scheduler pops the next queued request — keeps the
+        free-list arithmetic honest when several requests admit in one
+        engine loop."""
+        assert key not in self._reserved, f"double reserve of {key!r}"
+        if not self._state_free:
+            return False
+        fresh = self.table.alloc(plan.fresh_pages)
+        if fresh is None:
+            return False
+        if plan.shared:
+            self.table.share(plan.shared)
+        self._reserved[key] = (list(plan.shared) + fresh,
+                               self._state_free.pop())
+        return True
+
+    def bind(self, key, slot: int) -> None:
+        """Phase two: attach a reservation to the slot the scheduler
+        assigned."""
+        assert slot not in self.slot_pages, f"slot {slot} already mapped"
+        pages, srow = self._reserved.pop(key)
+        self.slot_pages[slot] = pages
+        self.slot_state[slot] = srow
+
+    def cancel(self, key) -> None:
+        """Drop an unbound reservation (requeue / shutdown)."""
+        pages, srow = self._reserved.pop(key)
+        self.table.free(pages)
+        self._state_free.append(srow)
+
+    def alloc(self, slot: int, plan: AdmitPlan) -> AdmitPlan:
+        """Commit a plan straight to a slot (``reserve`` + ``bind``
+        fused — the single-request path and the unit tests').  Raises
+        if the free list cannot cover it (call ``can_admit`` first)."""
+        assert slot not in self.slot_pages, f"slot {slot} already mapped"
+        if not self.reserve(("__alloc__", slot), plan):
+            raise RuntimeError(
+                f"out of pages: need {plan.fresh_pages}, "
+                f"free {self.table.free_pages}, "
+                f"state rows free {len(self._state_free)}")
+        self.bind(("__alloc__", slot), slot)
+        return plan
+
+    def append(self, slot: int, n_tokens: int) -> None:
+        """Grow a live request's page list to cover ``n_tokens`` total
+        positions (no-op when the eager allocation already covers them
+        — the deadlock-free default; an offload tier would allocate
+        lazily here)."""
+        need = self.pages_needed(n_tokens)
+        have = len(self.slot_pages[slot])
+        if need > have:
+            extra = self.table.alloc(need - have)
+            if extra is None:
+                raise RuntimeError(f"out of pages appending slot {slot}")
+            self.slot_pages[slot].extend(extra)
+
+    def fork_cow(self, src_pages, slot: int, n_fresh: int) -> list:
+        """Map ``src_pages`` copy-on-write into ``slot`` and extend
+        with ``n_fresh`` private pages — the raw share primitive under
+        ``alloc(plan)`` (exposed for tests and future schedulers)."""
+        assert slot not in self.slot_pages
+        fresh = self.table.alloc(n_fresh)
+        if fresh is None:
+            raise RuntimeError("out of pages in fork_cow")
+        self.table.share(src_pages)
+        self.slot_pages[slot] = list(src_pages) + fresh
+        if not self._state_free:
+            raise RuntimeError("out of state pages")
+        self.slot_state[slot] = self._state_free.pop()
+        return self.slot_pages[slot]
+
+    def ensure_writable(self, slot: int, first_pos: int,
+                        last_pos: int) -> int:
+        """Copy-on-write fork: any page in the slot's write window
+        [first_pos, last_pos] that is still shared (refcount > 1) is
+        copied to a fresh private page before the tick writes it.  With
+        the admission-time covered < len(prompt) invariant this never
+        fires — it is the safety valve that keeps future policies
+        (speculative rewind past a shared boundary, offload restore)
+        honest.  Returns pages forked."""
+        if first_pos > last_pos:
+            return 0
+        pages = self.slot_pages[slot]
+        j0 = first_pos // self.paging.span
+        j1 = min(last_pos // self.paging.span, len(pages) - 1)
+        forked = 0
+        for j in range(j0, j1 + 1):
+            if self.table.refs[pages[j]] > 1:
+                new = self.table.alloc(1)
+                if new is None:
+                    raise RuntimeError("out of pages in COW fork")
+                self._copy_page(pages[j], new[0])
+                self.table.free([pages[j]])
+                pages[j] = new[0]
+                forked += 1
+                self.cow_copies += 1
+        return forked
+
+    def free(self, slot: int, prompt=None) -> None:
+        """Release a finished request's pages (refcount--; shared
+        prefix pages survive under their cache entries).  When
+        ``prompt`` is given and a prefix cache is attached, the
+        prompt's full pages are registered for reuse first."""
+        pages = self.slot_pages.pop(slot)
+        if prompt is not None and self.prefix is not None:
+            self.prefix.register(prompt, pages, self.paging.span)
+        self.table.free(pages)
+        self._state_free.append(self.slot_state.pop(slot))
+
+    # -- device-side maps --------------------------------------------------
+    def page_map(self, n_slots: int) -> np.ndarray:
+        """(n_slots, pages_per_row) int32 physical-page map fed to the
+        step programs each tick; unmapped logical slots are NO_PAGE."""
+        m = np.full((n_slots, self.paging.pages_per_row), NO_PAGE,
+                    np.int32)
+        for slot, pages in self.slot_pages.items():
+            m[slot, :len(pages)] = pages
+        return m
+
+    def state_map(self, n_slots: int) -> np.ndarray:
+        """(n_slots,) int32 state-page row per slot (prism means pool)."""
+        m = np.full((n_slots,), NO_PAGE, np.int32)
+        for slot, row in self.slot_state.items():
+            m[slot] = row
+        return m
+
+    # -- device ops --------------------------------------------------------
+    def _jit(self, name, fn, donate=True):
+        if name not in self._jit_cache:
+            self._jit_cache[name] = jax.jit(
+                fn, donate_argnums=(0,) if donate else (),
+                out_shardings=self.sharding)
+        return self._jit_cache[name]
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Device copy of one pool page row src -> dst on every k/v
+        pool leaf (scan leaves carry the page dim at axis 1, tail at
+        axis 0) — the COW fork primitive."""
+        import jax.numpy as jnp
+
+        def body(storage, s, d):
+            def one(tree, axis):
+                out = {}
+                for key, v in tree.items():
+                    if key in ("k", "v"):
+                        row = lax.dynamic_slice_in_dim(v, s, 1, axis=axis)
+                        v = lax.dynamic_update_slice_in_dim(
+                            v, row, d, axis=axis)
+                    out[key] = v
+                return out
+            return {"scan": [one(t, 1) for t in storage["scan"]],
+                    "tail": [one(t, 0) for t in storage["tail"]]}
+        prog = self._jit("copy_page", body)
+        self.storage = prog(self.storage, jnp.asarray(src, jnp.int32),
+                            jnp.asarray(dst, jnp.int32))
+
+    def copy_state(self, src_row: int, dst_row: int) -> None:
+        """Device copy of one means-state pool row (kz/vz/gz/zsum) —
+        the snapshot/restore primitive a prism offload tier needs."""
+        import jax.numpy as jnp
+
+        def body(storage, s, d):
+            def one(tree, axis):
+                out = {}
+                for key, v in tree.items():
+                    if key in ("kz", "vz", "gz", "zsum"):
+                        row = lax.dynamic_slice_in_dim(v, s, 1, axis=axis)
+                        v = lax.dynamic_update_slice_in_dim(
+                            v, row, d, axis=axis)
+                    out[key] = v
+                return out
+            return {"scan": [one(t, 1) for t in storage["scan"]],
+                    "tail": [one(t, 0) for t in storage["tail"]]}
+        prog = self._jit("copy_state", body)
+        self.storage = prog(self.storage, jnp.asarray(src_row, jnp.int32),
+                            jnp.asarray(dst_row, jnp.int32))
+
+    # -- dense-rowset lifecycle (legacy oracle path) -----------------------
+    def grow_from(self, prefill_cache, lay_from):
+        """Dense mode: pad a prefill-sized cache to this cache's decode
+        capacity (replaces the free ``grow_cache``)."""
+        prog = self._jit(
+            ("grow", id(lay_from)),
+            functools.partial(grow_rows, lay_from=lay_from,
+                              lay_to=self.layout), donate=False)
+        return prog(prefill_cache)
+
+    def insert_row(self, src, src_row: int, dst_row: int) -> None:
+        """Dense mode: splice row ``src_row`` of ``src`` into this
+        cache (replaces the free ``insert_cache_row``)."""
+        import jax.numpy as jnp
+        prog = self._jit("insert", splice_row)
+        self.storage = prog(self.storage, src,
+                            jnp.asarray(src_row, jnp.int32),
+                            jnp.asarray(dst_row, jnp.int32))
+
+    def reset_row(self, row: int) -> None:
+        """Dense mode: zero one slot row (replaces ``reset_cache_row``)."""
+        import jax.numpy as jnp
+        prog = self._jit("reset", zero_row)
+        self.storage = prog(self.storage, jnp.asarray(row, jnp.int32))
+
+    # -- invariants / stats ------------------------------------------------
+    def check(self) -> None:
+        """Full page-accounting invariant: table consistency plus
+        every page's refcount equals the number of holders (slot page
+        lists + prefix entries) that name it."""
+        self.table.check()
+        held = np.zeros(self.paging.n_pages, np.int64)
+        for pages in self.slot_pages.values():
+            for p in pages:
+                held[p] += 1
+        for pages, _ in self._reserved.values():
+            for p in pages:
+                held[p] += 1
+        if self.prefix is not None:
+            for ent in self.prefix.entries.values():
+                for p in ent.pages:
+                    held[p] += 1
+        assert np.array_equal(held, self.table.refs.astype(np.int64)), \
+            (held.tolist(), self.table.refs.tolist())
+        srows = (sorted(self.slot_state.values())
+                 + [s for _, s in self._reserved.values()]
+                 + sorted(self._state_free))
+        assert sorted(srows) == list(range(self.paging.n_state_pages))
+
+    def stats(self) -> dict:
+        if not self.paged:
+            return {}
+        return {"pages_total": self.paging.n_pages,
+                "pages_free": self.table.free_pages,
+                "pages_used": self.table.used_pages,
+                "prefix_entries": (len(self.prefix.entries)
+                                   if self.prefix else 0),
+                "prefix_hits": self.prefix.hits if self.prefix else 0,
+                "cow_copies": self.cow_copies}

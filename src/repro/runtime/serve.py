@@ -89,6 +89,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from . import paging as _paging
+from .paging import KVCache, PagedLayout, PrefixCache, make_paged_layout
 from ..compat import axis_size, shard_map
 from ..core.attention import (_gqa_logits, _gqa_output, log_repeats,
                               prism_attention)
@@ -139,12 +141,21 @@ class ServeHParams:
 
 @dataclass(frozen=True)
 class ServeLayout:
-    """Cache placement.  Positions [0, prefill_len) are *prefill-aligned*:
-    shard ``s`` holds positions ``[s·n_loc0, (s+1)·n_loc0)`` in its slots
-    ``[0, n_loc0)``.  Decoded positions ``p >= prefill_len`` go round-robin:
-    shard ``(p - n0) % n_seq``, slot ``n_loc0 + (p - n0) // n_seq`` —
+    """Cache placement.  The default ``'aligned'`` placement: positions
+    [0, prefill_len) are *prefill-aligned* — shard ``s`` holds positions
+    ``[s·n_loc0, (s+1)·n_loc0)`` in its slots ``[0, n_loc0)``.  Decoded
+    positions ``p >= prefill_len`` go round-robin: shard
+    ``(p - n0) % n_seq``, slot ``n_loc0 + (p - n0) // n_seq`` —
     balanced writes, static shapes, and ``p = n0 - 1`` degrades exactly to
-    rewriting the final prefill slot (the dry-run's one-step case)."""
+    rewriting the final prefill slot (the dry-run's one-step case).
+
+    The ``'rr'`` placement (paged exact mode) round-robins EVERY
+    position: shard ``p % n_seq``, slot ``p // n_seq``.  A gang page of
+    consecutive per-shard columns then covers a CONTIGUOUS block of
+    token positions across all shards — the property prefix caching
+    needs for a shared page set to equal a position prefix.  Prism mode
+    keeps 'aligned' (Segment-Means shard ownership requires contiguous
+    per-shard position blocks), so paged prism shares no prefixes."""
     ba: tuple                        # batch mesh axes (may be empty)
     seq_axes: tuple                  # mesh axes sharding the cache sequence
     n_seq: int                       # total sequence shards (PRISM's P)
@@ -152,6 +163,7 @@ class ServeLayout:
     cap_l: int                       # per-shard capacity
     prefill_len: int                 # tokens laid down by prefill (n0)
     L: int                           # segment means per shard (prism cache)
+    placement: str = "aligned"       # 'aligned' | 'rr' (paged exact)
 
     @property
     def bspec(self):
@@ -185,82 +197,48 @@ def seq_shards(mesh, batch: int) -> int:
 
 
 def make_layout(cfg: ModelConfig, mesh, batch: int, cap: int,
-                hp: ServeHParams, prefill_len: int | None = None
-                ) -> ServeLayout:
+                hp: ServeHParams, prefill_len: int | None = None,
+                placement: str = "aligned") -> ServeLayout:
     axes = mesh_axes(mesh)
     ba, seq = _layout_axes(mesh, batch)
     n_seq = int(np.prod([axes[a] for a in seq]))
     n0 = cap if prefill_len is None else prefill_len
     assert cap % n_seq == 0 and n0 % n_seq == 0 and n0 <= cap, (cap, n0, n_seq)
+    assert placement in ("aligned", "rr"), placement
     cap_l = cap // n_seq
     L = max(1, int(n0 // (hp.means_cr * n_seq)))
     L = min(L, n0 // n_seq)
-    return ServeLayout(ba, seq, n_seq, cap, cap_l, n0, L)
+    return ServeLayout(ba, seq, n_seq, cap, cap_l, n0, L, placement)
+
+
+def _paged_placement(hp: ServeHParams, paging) -> str:
+    """Paged exact mode stores round-robin so pages cover contiguous
+    position blocks (prefix sharing); paged prism keeps the aligned
+    placement the Segment-Means shard ownership is defined over."""
+    return "rr" if (paging is not None
+                    and hp.decode_mode == "exact") else "aligned"
 
 
 def grow_cache(cache, lay_from: ServeLayout, lay_to: ServeLayout):
-    """Pad a prefill cache (cap == prefill_len) out to a larger decode
-    capacity.  Only the sequence-sharded k/v leaves grow; the pad is
-    interleaved per shard (global view (..., P·c, H, hd) ->
-    (..., P·c', H, hd)).  Works on both stacked ('scan') and 'tail'
-    entries."""
-    pad = lay_to.cap_l - lay_from.cap_l
-    if pad == 0:
-        return cache
-
-    def fix(d):
-        out = {}
-        for key, v in d.items():
-            sd = v.ndim - 3                      # the sequence dim of k/v
-            if key in ("k", "v") and v.shape[sd] == lay_from.cap:
-                lead = v.shape[:sd]
-                v = v.reshape(*lead, lay_from.n_seq, lay_from.cap_l,
-                              *v.shape[sd + 1:])
-                widths = [(0, 0)] * v.ndim
-                widths[sd + 1] = (0, pad)
-                v = jnp.pad(v, widths)
-                v = v.reshape(*lead, lay_to.cap, *v.shape[sd + 2:])
-            out[key] = v
-        return out
-    return {"scan": [fix(c) for c in cache["scan"]],
-            "tail": [fix(c) for c in cache["tail"]]}
+    """Deprecated shim — use ``KVCache.grow_from`` (the engine's single
+    cache-lifecycle object, built by ``make_kv_cache``).  Kept for the
+    legacy padded admission tests; delegates to
+    ``runtime.paging.grow_rows``."""
+    return _paging.grow_rows(cache, lay_from, lay_to)
 
 
 def insert_cache_row(dst, src, src_row, dst_row):
-    """Copy batch row ``src_row`` of cache ``src`` into row ``dst_row``
-    of ``dst`` — a batch-dim ``dynamic_update_slice`` on every leaf
-    (k/v, means-KV, SSM states, conv tails all carry a leading batch
-    dim).  This is how the serving engine splices a freshly prefilled
-    request into a free decode slot mid-flight.  Both caches must share
-    a layout (``grow_cache`` a prefill cache to the decode capacity
-    first).  Pass the row indices as arrays and jit with
-    ``donate_argnums=(0,)`` so the hot loop compiles once.
-
-    Stacked 'scan' leaves are (n_units, B, ...) — batch axis 1; 'tail'
-    leaves are (B, ...) — batch axis 0."""
-    def splice(d, s, batch_axis):
-        row = lax.dynamic_slice_in_dim(s, src_row, 1, axis=batch_axis)
-        return lax.dynamic_update_slice_in_dim(
-            d, row.astype(d.dtype), dst_row, axis=batch_axis)
-
-    return {"scan": [jax.tree.map(lambda d, s: splice(d, s, 1), dc, sc)
-                     for dc, sc in zip(dst["scan"], src["scan"])],
-            "tail": [jax.tree.map(lambda d, s: splice(d, s, 0), dc, sc)
-                     for dc, sc in zip(dst["tail"], src["tail"])]}
+    """Deprecated shim — use ``KVCache.insert_row``.  Kept for the
+    legacy padded admission tests; delegates to
+    ``runtime.paging.splice_row`` (same semantics: a batch-dim splice
+    of one cache row; jit with ``donate_argnums=(0,)``)."""
+    return _paging.splice_row(dst, src, src_row, dst_row)
 
 
 def reset_cache_row(cache, row):
-    """Zero one batch row of the decode cache (slot hygiene after
-    eviction; optional — an insert overwrites the row wholesale)."""
-    def one_tree(tree, batch_axis):
-        def fix(c):
-            sh = list(c.shape)
-            sh[batch_axis] = 1
-            return lax.dynamic_update_slice_in_dim(
-                c, jnp.zeros(sh, c.dtype), row, axis=batch_axis)
-        return jax.tree.map(fix, tree)
-    return {"scan": [one_tree(t, 1) for t in cache["scan"]],
-            "tail": [one_tree(t, 0) for t in cache["tail"]]}
+    """Deprecated shim — use ``KVCache.reset_row``.  Delegates to
+    ``runtime.paging.zero_row``."""
+    return _paging.zero_row(cache, row)
 
 
 # --------------------------------------------------------------------------
@@ -268,10 +246,28 @@ def reset_cache_row(cache, row):
 # --------------------------------------------------------------------------
 
 def layer_cache_shape(cfg: ModelConfig, kind: str, lay: ServeLayout,
-                      batch: int, hp: ServeHParams, dtype):
+                      batch: int, hp: ServeHParams, dtype,
+                      paging: PagedLayout | None = None):
     hkv, hd = cfg.n_kv_heads, cfg.hd
     d_in = cfg.d_model * cfg.ssm_expand
     if kind in ("attn", "moe", "shared_attn"):
+        if paging is not None:
+            # paged pool: a page gangs ``page_cols`` columns on every
+            # seq shard (global dim 1 = page_cols·n_seq, sharded over
+            # the seq axes exactly like the dense rows); the batch dim
+            # is GONE — requests own page lists, not rows.  Prism's
+            # Segment-Means running state rides in its own state-page
+            # pool, one row per active request via ``state_map``.
+            c = {"k": ((paging.n_pages, paging.pool_cap, hkv, hd), dtype),
+                 "v": ((paging.n_pages, paging.pool_cap, hkv, hd), dtype)}
+            if hp.decode_mode == "prism":
+                m = lay.n_seq * lay.L
+                s = paging.n_state_pages
+                c["kz"] = ((s, m, hkv, hd), dtype)
+                c["vz"] = ((s, m, hkv, hd), dtype)
+                c["gz"] = ((s, m), jnp.float32)
+                c["zsum"] = ((s, m, cfg.d_model), jnp.float32)
+            return c
         # GLOBAL shapes (jit-level inputs); sharded over seq -> (B, cap_l)
         c = {"k": ((batch, lay.cap, hkv, hd), dtype),
              "v": ((batch, lay.cap, hkv, hd), dtype)}
@@ -286,6 +282,10 @@ def layer_cache_shape(cfg: ModelConfig, kind: str, lay: ServeLayout,
             c["gz"] = ((batch, m), jnp.float32)
             c["zsum"] = ((batch, m, cfg.d_model), jnp.float32)
         return c
+    if paging is not None:
+        raise ValueError(
+            f"paged caches support position-addressed attention kinds "
+            f"only (got block kind {kind!r})")
     if kind == "attn_local":
         w = min(cfg.window or lay.cap, lay.cap)
         return {"k": ((batch, w, hkv, hd), dtype),
@@ -304,9 +304,20 @@ def layer_cache_shape(cfg: ModelConfig, kind: str, lay: ServeLayout,
     raise ValueError(kind)
 
 
-def layer_cache_spec(kind: str, lay: ServeLayout, hp: ServeHParams):
+def layer_cache_spec(kind: str, lay: ServeLayout, hp: ServeHParams,
+                     paging: PagedLayout | None = None):
     b = lay.bspec
     if kind in ("attn", "moe", "shared_attn"):
+        if paging is not None:
+            # pool pages replicated over the batch axes (every batch
+            # replica computes identical writes), sharded over seq
+            s = {"k": P(None, lay.seq_axes), "v": P(None, lay.seq_axes)}
+            if hp.decode_mode == "prism":
+                s["kz"] = P(None)
+                s["vz"] = P(None)
+                s["gz"] = P(None)
+                s["zsum"] = P(None)
+            return s
         s = {"k": P(b, lay.seq_axes), "v": P(b, lay.seq_axes)}
         if hp.decode_mode == "prism":
             s["kz"] = P(b)
@@ -324,7 +335,8 @@ def layer_cache_spec(kind: str, lay: ServeLayout, hp: ServeHParams):
 
 
 def cache_shapes(cfg: ModelConfig, lay: ServeLayout, batch: int,
-                 hp: ServeHParams, dtype=jnp.float32):
+                 hp: ServeHParams, dtype=jnp.float32,
+                 paging: PagedLayout | None = None):
     """ShapeDtypeStruct pytree (dry-run input stand-in; no allocation).
     Mirrors the stacked parameter layout: {'scan': [u stacked trees with
     leading n_units], 'tail': [...]}."""
@@ -332,7 +344,8 @@ def cache_shapes(cfg: ModelConfig, lay: ServeLayout, batch: int,
     kinds = cfg.block_kinds
 
     def one(kind, lead=None):
-        shapes = layer_cache_shape(cfg, kind, lay, batch, hp, dtype)
+        shapes = layer_cache_shape(cfg, kind, lay, batch, hp, dtype,
+                                   paging)
         return {k: jax.ShapeDtypeStruct(
             ((lead,) + sh) if lead else sh, dt)
             for k, (sh, dt) in shapes.items()}
@@ -341,12 +354,13 @@ def cache_shapes(cfg: ModelConfig, lay: ServeLayout, batch: int,
                      for t in range(len(kinds) - n_units * u)]}
 
 
-def cache_specs(cfg: ModelConfig, lay: ServeLayout, hp: ServeHParams):
+def cache_specs(cfg: ModelConfig, lay: ServeLayout, hp: ServeHParams,
+                paging: PagedLayout | None = None):
     u, n_units, _ = cfg.scan_split
     kinds = cfg.block_kinds
 
     def one(kind, stacked):
-        s = layer_cache_spec(kind, lay, hp)
+        s = layer_cache_spec(kind, lay, hp, paging)
         if stacked:
             s = {k: P(*((None,) + tuple(v))) for k, v in s.items()}
         return s
@@ -356,10 +370,31 @@ def cache_specs(cfg: ModelConfig, lay: ServeLayout, hp: ServeHParams):
 
 
 def init_cache(cfg: ModelConfig, lay: ServeLayout, batch: int,
-               hp: ServeHParams, dtype=jnp.float32):
+               hp: ServeHParams, dtype=jnp.float32,
+               paging: PagedLayout | None = None):
     """Zero-filled global-shape cache (host-mesh tests / examples)."""
-    shapes = cache_shapes(cfg, lay, batch, hp, dtype)
+    shapes = cache_shapes(cfg, lay, batch, hp, dtype, paging)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def make_kv_cache(cfg: ModelConfig, mesh, lay: ServeLayout, batch: int,
+                  hp: ServeHParams, *, paging: PagedLayout | None = None,
+                  prefix_cache: bool = False,
+                  dtype=jnp.float32) -> KVCache:
+    """Build the engine's single cache object: zero-filled device
+    storage placed under the right shardings, wrapped in a ``KVCache``
+    (paged: pool + ``PageTable`` [+ ``PrefixCache``] and the
+    alloc/append/fork/free lifecycle; dense: the legacy rowset with
+    ``grow_from``/``insert_row``/``reset_row`` replacing the old free
+    functions)."""
+    specs = cache_specs(cfg, lay, hp, paging)
+    sh = jax.tree.map(functools.partial(NamedSharding, mesh), specs)
+    storage = jax.device_put(init_cache(cfg, lay, batch, hp, dtype,
+                                        paging), sh)
+    kv = KVCache(storage=storage, layout=lay, paging=paging, sharding=sh)
+    if paging is not None and prefix_cache:
+        kv.prefix = PrefixCache(kv.table)
+    return kv
 
 
 # --------------------------------------------------------------------------
@@ -412,6 +447,35 @@ def _write_packed(cache_kv, new_rows, row, col, ok):
     c = jnp.where(ok, col, cap_l)                         # OOB -> dropped
     return cache_kv.at[r, c].set(new_rows.astype(cache_kv.dtype),
                                  mode="drop")
+
+
+def _gather_pages(pool, pages):
+    """Reassemble virtual cache rows from the page pool: ``pool``
+    (n_pages, page_cols, ...) LOCAL shard, ``pages`` (R, ppr) physical
+    page ids per logical page slot -> (R, ppr·page_cols, ...) —
+    logical column ``j`` of row ``r`` is page ``pages[r, j // pc]``,
+    offset ``j % pc``.  Unmapped slots (id < 0) gather page 0; callers
+    mask them out of ``valid`` (they are never owned positions).  This
+    is the one extra level of indirection every paged step pays —
+    the paged generalization of the packed step's per-token row
+    gather."""
+    pc = pool.shape[1]
+    g = jnp.take(pool, jnp.clip(pages, 0, pool.shape[0] - 1), axis=0)
+    return g.reshape(pages.shape[0], pages.shape[1] * pc,
+                     *pool.shape[2:])
+
+
+def _write_pool(pool, rows, page, poff, ok):
+    """Scatter per-item (Hkv, hd) rows into the page pool at
+    (physical page, in-page offset) addresses.  Items with ``ok``
+    False or an unmapped page route to an out-of-range offset and are
+    dropped; in-range duplicates never occur (each page has exactly
+    one writer — shared prefix pages are never in any write window).
+    O(items), independent of pool size."""
+    n_pages, pc = pool.shape[:2]
+    pg = jnp.clip(page, 0, n_pages - 1)
+    po = jnp.where(ok & (page >= 0), poff, pc)            # OOB -> dropped
+    return pool.at[pg, po].set(rows.astype(pool.dtype), mode="drop")
 
 
 def decode_attention(q, k, v, valid, axes, scale, *, gz=None, kz=None,
@@ -598,10 +662,19 @@ def _means_meta(lay: ServeLayout):
 
 def _decode_cols(lay: ServeLayout, idx, pos):
     """(write_slot (B,), owner (B,), col_pos (cap_l,)) under the
-    prefill-aligned placement (see ServeLayout).  ``pos`` is the (B,)
+    layout's placement (see ServeLayout).  ``pos`` is the (B,)
     per-request position vector; idle slots pass pos = -1, which lands
     owner = False on every shard (no write).  ``col_pos`` maps shard
     slots to global positions and is position-independent."""
+    if lay.placement == "rr":
+        # pure round-robin: position p -> shard p % n_seq, column
+        # p // n_seq.  pos = -1 floors to slot -1 (owner False).
+        slot = pos // lay.n_seq
+        wr_shard = pos % lay.n_seq
+        owner = ((wr_shard == idx) & (slot >= 0) & (slot < lay.cap_l)
+                 & (pos >= 0))
+        col_pos = jnp.arange(lay.cap_l) * lay.n_seq + idx
+        return slot, owner, col_pos
     n0, n_loc0 = lay.prefill_len, lay.n_loc0
     extra = pos - n0
     slot = jnp.where(extra >= 0,
@@ -620,9 +693,19 @@ def _decode_cols(lay: ServeLayout, idx, pos):
 
 
 def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
-                lay: ServeLayout, hp: ServeHParams, *, local: bool):
+                lay: ServeLayout, hp: ServeHParams, *, local: bool,
+                page_map=None, state_map=None):
     """x (B,1,D) replicated over seq axes, pos (B,) per-request positions
-    (-1 = idle slot) -> (out (B,1,D), new layer cache)."""
+    (-1 = idle slot) -> (out (B,1,D), new layer cache).
+
+    Paged mode (``page_map`` (B, ppr) set): the layer cache is the
+    page pool; each row's virtual cache row is gathered through its
+    page list, the new K/V row scatters to its (page, offset) address,
+    and in prism mode the per-request means state is read through
+    ``state_map`` (B,) from the state-page pool.  Everything is
+    replicated over the batch axes (identical writes on every
+    replica), so the attention combine still runs over the sequence
+    axes only."""
     xn = norm(p["ln1"], x, cfg.norm_kind)
     rp = pos[:, None]                          # (B,1) row positions
     q = attn_project_q(p["attn"], spec, xn, rp)
@@ -646,9 +729,23 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
     else:
         idx = _seq_index(lay.seq_axes)
         slot, owner, col_pos = _decode_cols(lay, idx, pos)
-        k_c = _write_slot(c["k"], k_new, slot, owner)
-        v_c = _write_slot(c["v"], v_new, slot, owner)
-        valid = col_pos[None, :] <= pos[:, None]
+        if page_map is not None:
+            pc = c["k"].shape[1]
+            colc = jnp.clip(slot, 0, lay.cap_l - 1)
+            pg = jnp.take_along_axis(
+                page_map, (colc // pc)[:, None], axis=1)[:, 0]
+            k_pool = _write_pool(c["k"], k_new[:, 0], pg, colc % pc,
+                                 owner)
+            v_pool = _write_pool(c["v"], v_new[:, 0], pg, colc % pc,
+                                 owner)
+            k_c = _gather_pages(k_pool, page_map)
+            v_c = _gather_pages(v_pool, page_map)
+            mapped = jnp.repeat(page_map >= 0, pc, axis=1)
+            valid = mapped & (col_pos[None, :] <= pos[:, None])
+        else:
+            k_c = _write_slot(c["k"], k_new, slot, owner)
+            v_c = _write_slot(c["v"], v_new, slot, owner)
+            valid = col_pos[None, :] <= pos[:, None]
         if hp.decode_mode == "prism" and "kz" in c:
             # per-request repeat counts ride in the cache (written by
             # the prefill that captured kz/vz, so they count REAL
@@ -661,19 +758,28 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
             # holds, for the legacy padded flush (gz = full sizes) it
             # reduces to the old ``hi <= pos`` causal gating.
             lo, _, _, _, shard_of = _means_meta(lay)
-            cnt = c["gz"]
+            if state_map is not None:
+                sr = jnp.clip(state_map, 0, c["gz"].shape[0] - 1)
+                cnt = jnp.take(c["gz"], sr, axis=0)
+                kz_r = jnp.take(c["kz"], sr, axis=0)
+                vz_r = jnp.take(c["vz"], sr, axis=0)
+            else:
+                cnt, kz_r, vz_r = c["gz"], c["kz"], c["vz"]
             gz = jnp.where(
                 (jnp.asarray(shard_of)[None, :] != idx)
                 & (jnp.asarray(lo)[None, :] + cnt <= pos[:, None] + 1),
                 cnt, 0.0)
             out = decode_attention(
                 q, k_c, v_c, valid, lay.seq_axes, scale,
-                gz=gz, kz=c["kz"], vz=c["vz"], owner=owner,
+                gz=gz, kz=kz_r, vz=vz_r, owner=owner,
                 mode="prism", backend=hp.backend)
         else:
             out = decode_attention(q, k_c, v_c, valid, lay.seq_axes,
                                    scale, backend=hp.backend)
-        new_c = dict(c, k=k_c, v=v_c)
+        if page_map is not None:
+            new_c = dict(c, k=k_pool, v=v_pool)
+        else:
+            new_c = dict(c, k=k_c, v=v_c)
 
     o = attn_output(p["attn"], out)
     if cfg.parallel_block:
@@ -781,7 +887,7 @@ class DecodeMoeCtx:
 
 def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
                  lay: ServeLayout, hp: ServeHParams,
-                 tp_flags=(False, False)):
+                 tp_flags=(False, False), page_map=None, state_map=None):
     """One residual block, single-token decode.  Returns (x, new_cache)."""
     attn_tp, ffn_tp = tp_flags
     use_tp = hp.decode_tp and kind in ("attn", "moe", "shared_attn")
@@ -798,7 +904,8 @@ def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
                                   attn_tp=attn_tp, ffn_tp=ffn_tp)
         else:
             o, c = attn_decode(p, spec, cfg, x, c, pos, lay, hp,
-                               local=(kind == "attn_local"))
+                               local=(kind == "attn_local"),
+                               page_map=page_map, state_map=state_map)
         x = x + o
         if cfg.parallel_block:
             return x, c
@@ -816,7 +923,8 @@ def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
                                   attn_tp=attn_tp, ffn_tp=ffn_tp)
         else:
             o, c = attn_decode(shared, spec, cfg, x, c, pos, lay, hp,
-                               local=False)
+                               local=False, page_map=page_map,
+                               state_map=state_map)
         x = x + o
         x = x + ffn(shared["mlp"], norm(shared["ln2"], x, cfg.norm_kind))
         return x, c
@@ -889,7 +997,8 @@ def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
 
 def make_serve_step(cfg: ModelConfig, mesh, params, *,
                     batch: int, cap: int, prefill_len: int | None = None,
-                    hp: ServeHParams = ServeHParams()):
+                    hp: ServeHParams = ServeHParams(),
+                    paging: PagedLayout | None = None):
     """jitted (params, cache, token (B,), pos (B,)) -> (logits, cache).
 
     ``pos`` carries one position per batch row, so independent requests
@@ -898,8 +1007,18 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
     finite logits and never write the cache (owner masking).  ``logits``
     is (B, V) — vocab-sharded over 'model' when the embedding table is
     (the returned lspec says which).
+
+    With ``paging`` the cache is the page pool and the program takes
+    two extra inputs ``(page_map (B, ppr), state_map (B,))`` — the
+    per-slot physical page lists the host rebuilds each tick.  Token /
+    pos vectors ride replicated (the pool is replicated over the batch
+    axes; every replica computes identical writes), and logits come
+    back replicated too.
     """
-    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len)
+    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len,
+                      _paged_placement(hp, paging))
+    if paging is not None:
+        assert not hp.decode_tp, "paged serving does not support decode_tp"
     if hp.decode_tp:
         from ..sharding.rules import decode_param_specs
         rules = decode_param_specs(params, mesh, cfg.vocab_size, cfg)
@@ -912,14 +1031,15 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
         rules = param_specs(params, mesh, cfg.vocab_size)
         tp_flags = (False, False)
     pspecs = spec_tree(rules)
-    cspecs = cache_specs(cfg, lay, hp)
+    cspecs = cache_specs(cfg, lay, hp, paging)
     vocab_sharded = (rules["embed"]["table"].kind == "vocab")
     shared_rules = rules.get("shared")
 
     u, n_units, _ = cfg.scan_split
     unit_kinds = cfg.block_kinds[:u]
 
-    def body(params_local, cache_local, token, pos):
+    def body_core(params_local, cache_local, token, pos, page_map,
+                  state_map):
         trace_counts["serve_step"] += 1
         x = embed_token(cfg, params_local, rules, token, pos,
                         sharded_vocab=vocab_sharded)
@@ -932,7 +1052,8 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
             for j, kind in enumerate(unit_kinds):
                 p = gather_tree(p_sl[j], rules["scan"][j])
                 x, nc = block_decode(cfg, kind, p, shared, x, c_sl[j],
-                                     pos, lay, hp, tp_flags)
+                                     pos, lay, hp, tp_flags,
+                                     page_map, state_map)
                 new.append(nc)
             return x, tuple(new)
 
@@ -948,7 +1069,7 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
                       if shared_rules else None)
             x, nc = block_decode(cfg, kind, p, shared, x,
                                  cache_local["tail"][t], pos, lay, hp,
-                                 tp_flags)
+                                 tp_flags, page_map, state_map)
             new_tail.append(nc)
 
         x = norm(params_local["final_norm"], x, cfg.norm_kind)
@@ -958,19 +1079,27 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
             logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
         return logits, {"scan": list(new_stacks), "tail": new_tail}
 
-    lspec = P(lay.bspec, "model" if vocab_sharded else None)
+    vspec = P(None) if paging is not None else P(lay.bspec)
+    lspec = P(None if paging is not None else lay.bspec,
+              "model" if vocab_sharded else None)
+    if paging is not None:
+        body = body_core
+        in_specs = (pspecs, cspecs, vspec, vspec, P(None), P(None))
+    else:
+        def body(params_local, cache_local, token, pos):
+            return body_core(params_local, cache_local, token, pos,
+                             None, None)
+        in_specs = (pspecs, cspecs, vspec, vspec)
     body_sm = shard_map(
         body, mesh=mesh,
-        in_specs=(pspecs, cspecs, P(lay.bspec), P(lay.bspec)),
+        in_specs=in_specs,
         out_specs=(lspec, cspecs),
         check_vma=False)
 
     sh = functools.partial(NamedSharding, mesh)
     jitted = jax.jit(
         body_sm,
-        in_shardings=(jax.tree.map(sh, pspecs),
-                      jax.tree.map(sh, cspecs),
-                      sh(P(lay.bspec)), sh(P(lay.bspec))),
+        in_shardings=tuple(jax.tree.map(sh, s) for s in in_specs),
         out_shardings=(sh(lspec), jax.tree.map(sh, cspecs)),
         donate_argnums=(1,),
     )
@@ -1073,12 +1202,17 @@ def prefill_attn(p, spec: AttnSpec, cfg: ModelConfig, x, ctx, lay,
 
 def make_prefill_step(cfg: ModelConfig, mesh, params, prism: PrismConfig,
                       *, batch: int, n: int,
-                      hp: ServeHParams = ServeHParams()):
+                      hp: ServeHParams = ServeHParams(),
+                      cap: int | None = None):
     """jitted (params, batch_dict) -> (last-token logits, decode cache).
 
     ``batch_dict`` = {"tokens": (B, N)} (+ "embeds" for vlm/audio stubs).
+    ``cap`` sizes the captured cache rows beyond the prompt (the
+    padded-admission engine prefills straight into decode-capacity
+    rows, so no grow step remains); default: rows sized to ``n``.
     """
-    lay = make_layout(cfg, mesh, batch, n, hp)
+    lay = make_layout(cfg, mesh, batch, n if cap is None else cap, hp,
+                      prefill_len=n)
     rules = param_specs(params, mesh, cfg.vocab_size)
     pspecs = spec_tree(rules)
     cspecs = cache_specs(cfg, lay, hp)
@@ -1228,7 +1362,8 @@ def make_prefill_step(cfg: ModelConfig, mesh, params, prism: PrismConfig,
 # --------------------------------------------------------------------------
 
 def attn_chunk_prefill(p, spec: AttnSpec, cfg: ModelConfig, x, c, row_pos,
-                       off, lay: ServeLayout, hp: ServeHParams):
+                       off, lay: ServeLayout, hp: ServeHParams,
+                       page_map=None, state_map=None):
     """Attention sublayer over one prefill chunk.
 
     ``x`` (B,C,D) replicated over the sequence axes; ``row_pos`` (B,C)
@@ -1240,7 +1375,12 @@ def attn_chunk_prefill(p, spec: AttnSpec, cfg: ModelConfig, x, c, row_pos,
     pass, cross-shard stat combine), and in prism mode advances the
     Segment-Means capture over REAL columns only — the running
     per-segment sums ``zsum`` and counts ``gz`` ride in the cache, so
-    a short prompt's kz/vz never average pad columns."""
+    a short prompt's kz/vz never average pad columns.
+
+    Paged mode (``page_map`` (B, ppr) set): K/V writes scatter to each
+    token's (page, offset) address and the prior columns gather through
+    the row's leading pages; the Segment-Means running state lives in
+    the state-page pool, read and written through ``state_map`` (B,)."""
     xn = norm(p["ln1"], x, cfg.norm_kind)
     q = attn_project_q(p["attn"], spec, xn, row_pos)
     k_new, v_new = attn_project_kv(p["attn"], spec, xn, row_pos)
@@ -1248,14 +1388,35 @@ def attn_chunk_prefill(p, spec: AttnSpec, cfg: ModelConfig, x, c, row_pos,
 
     idx = _seq_index(lay.seq_axes)
     slot, owner, col_pos = _decode_cols(lay, idx, row_pos)
-    k_c = _write_chunk(c["k"], k_new, slot, owner)
-    v_c = _write_chunk(c["v"], v_new, slot, owner)
-
     # prior columns: everything before the chunk offset lives in the
-    # prefill-aligned region, so the static [0, n_loc0) slice of the
-    # shard suffices and validity is uniform over the chunk's queries
+    # leading [0, n_loc0) columns of the shard under BOTH placements
+    # (aligned: by construction; rr: p < n0 => p//n_seq < n_loc0), so
+    # the static slice / leading-page gather suffices and validity is
+    # uniform over the chunk's queries
     n_loc0 = lay.n_loc0
-    valid = col_pos[:n_loc0][None, :] < jnp.maximum(off, 0)[:, None]
+    if page_map is not None:
+        pc = c["k"].shape[1]
+        colc = jnp.clip(slot, 0, lay.cap_l - 1)
+        pg = jnp.take_along_axis(page_map, colc // pc, axis=1)
+        flat = lambda a: a.reshape((-1,) + a.shape[2:])
+        k_pool = _write_pool(c["k"], flat(k_new), flat(pg),
+                             flat(colc % pc), flat(owner))
+        v_pool = _write_pool(c["v"], flat(v_new), flat(pg),
+                             flat(colc % pc), flat(owner))
+        pages_pre = page_map[:, :n_loc0 // pc]
+        k_pre = _gather_pages(k_pool, pages_pre)
+        v_pre = _gather_pages(v_pool, pages_pre)
+        mapped = jnp.repeat(pages_pre >= 0, pc, axis=1)
+        valid = mapped & (col_pos[:n_loc0][None, :]
+                          < jnp.maximum(off, 0)[:, None])
+        new_c = dict(c, k=k_pool, v=v_pool)
+    else:
+        k_c = _write_chunk(c["k"], k_new, slot, owner)
+        v_c = _write_chunk(c["v"], v_new, slot, owner)
+        k_pre, v_pre = k_c[:, :n_loc0], v_c[:, :n_loc0]
+        valid = col_pos[:n_loc0][None, :] < jnp.maximum(off, 0)[:, None]
+        new_c = dict(c, k=k_c, v=v_c)
+
     # the chunk itself: causal over its own just-projected rows.  Each
     # chunk column contributes on the ONE shard that owns its cache
     # slot (a chunk may span a shard boundary) — the cross-shard psum
@@ -1265,17 +1426,21 @@ def attn_chunk_prefill(p, spec: AttnSpec, cfg: ModelConfig, x, c, row_pos,
     bias_self = jnp.where(
         (jj[None, None, :] <= jj[None, :, None])
         & alive[:, :, None] & owner[:, None, :], 0.0, NEG_INF)
-    out = chunk_attention(q, k_c[:, :n_loc0], v_c[:, :n_loc0], valid,
+    out = chunk_attention(q, k_pre, v_pre, valid,
                           bias_self, k_new, v_new, lay.seq_axes, scale,
                           backend=hp.backend)
-    new_c = dict(c, k=k_c, v=v_c)
 
     if hp.decode_mode == "prism" and "kz" in c:
         lo, hi, mid, _, _ = _means_meta(lay)
         act = off >= 0                             # rows advanced this call
         seg = ((jnp.asarray(lo)[None, None, :] <= row_pos[:, :, None])
                & (row_pos[:, :, None] <= jnp.asarray(hi)[None, None, :]))
-        zsum = jnp.where((off == 0)[:, None, None], 0.0, c["zsum"])
+        if state_map is not None:
+            sr = jnp.clip(state_map, 0, c["zsum"].shape[0] - 1)
+            zs_prev = jnp.take(c["zsum"], sr, axis=0)
+        else:
+            zs_prev = c["zsum"]
+        zsum = jnp.where((off == 0)[:, None, None], 0.0, zs_prev)
         zsum = zsum + jnp.einsum("bcm,bcd->bmd", seg.astype(jnp.float32),
                                  x.astype(jnp.float32))
         filled = jnp.maximum(off, 0) + alive.sum(axis=1)
@@ -1284,11 +1449,24 @@ def attn_chunk_prefill(p, spec: AttnSpec, cfg: ModelConfig, x, c, row_pos,
         kz, vz = attn_project_kv(p["attn"], spec,
                                  norm(p["ln1"], z, cfg.norm_kind),
                                  jnp.asarray(mid, jnp.float32))
-        sel = act[:, None, None, None]
-        new_c["kz"] = jnp.where(sel, kz.astype(c["kz"].dtype), c["kz"])
-        new_c["vz"] = jnp.where(sel, vz.astype(c["vz"].dtype), c["vz"])
-        new_c["gz"] = jnp.where(act[:, None], cnt, c["gz"])
-        new_c["zsum"] = zsum
+        if state_map is not None:
+            # state rows are unique per active slot, so the scatter has
+            # no in-range duplicates; inactive rows route OOB (their
+            # pool rows stay put — same as the dense where(act) select)
+            S = c["zsum"].shape[0]
+            dst = jnp.where(act & (state_map >= 0), state_map, S)
+            new_c["kz"] = c["kz"].at[dst].set(
+                kz.astype(c["kz"].dtype), mode="drop")
+            new_c["vz"] = c["vz"].at[dst].set(
+                vz.astype(c["vz"].dtype), mode="drop")
+            new_c["gz"] = c["gz"].at[dst].set(cnt, mode="drop")
+            new_c["zsum"] = c["zsum"].at[dst].set(zsum, mode="drop")
+        else:
+            sel = act[:, None, None, None]
+            new_c["kz"] = jnp.where(sel, kz.astype(c["kz"].dtype), c["kz"])
+            new_c["vz"] = jnp.where(sel, vz.astype(c["vz"].dtype), c["vz"])
+            new_c["gz"] = jnp.where(act[:, None], cnt, c["gz"])
+            new_c["zsum"] = zsum
 
     o = attn_output(p["attn"], out)
     if cfg.parallel_block:
@@ -1297,14 +1475,15 @@ def attn_chunk_prefill(p, spec: AttnSpec, cfg: ModelConfig, x, c, row_pos,
 
 
 def block_chunk_prefill(cfg: ModelConfig, kind: str, p, shared, x, c,
-                        row_pos, off, lay: ServeLayout, hp: ServeHParams):
+                        row_pos, off, lay: ServeLayout, hp: ServeHParams,
+                        page_map=None, state_map=None):
     """One residual block over a prefill chunk.  Returns (x, new_cache).
     Only position-addressed global-attention kinds are chunkable — the
     same set the serving engine admits."""
     if kind in ("attn", "moe"):
         spec = T.attn_spec(cfg, kind)
         o, c = attn_chunk_prefill(p, spec, cfg, x, c, row_pos, off,
-                                  lay, hp)
+                                  lay, hp, page_map, state_map)
         x = x + o
         if cfg.parallel_block:
             return x, c
@@ -1319,7 +1498,7 @@ def block_chunk_prefill(cfg: ModelConfig, kind: str, p, shared, x, c,
     if kind == "shared_attn":
         spec = T.attn_spec(cfg, "attn")
         o, c = attn_chunk_prefill(shared, spec, cfg, x, c, row_pos, off,
-                                  lay, hp)
+                                  lay, hp, page_map, state_map)
         x = x + o
         x = x + mlp(shared["mlp"], norm(shared["ln2"], x, cfg.norm_kind),
                     cfg.mlp_kind)
@@ -1332,8 +1511,10 @@ def block_chunk_prefill(cfg: ModelConfig, kind: str, p, shared, x, c,
 def make_chunk_prefill_step(cfg: ModelConfig, mesh, params, *,
                             batch: int, cap: int, prefill_len: int,
                             chunk_len: int,
-                            hp: ServeHParams = ServeHParams()):
-    """jitted (params, cache, tokens (B,C), off (B,), nreal (B,)) -> cache.
+                            hp: ServeHParams = ServeHParams(),
+                            paging: PagedLayout | None = None):
+    """jitted (params, cache, tokens (B,C), off (B,), nreal (B,)) -> cache
+    (paged: two trailing (page_map (B,ppr), state_map (B,)) inputs).
 
     One compiled program advances every mid-prefill request by up to
     ``chunk_len`` prompt tokens: row ``i``'s tokens land at global
@@ -1353,11 +1534,12 @@ def make_chunk_prefill_step(cfg: ModelConfig, mesh, params, *,
     pin this).  In prism decode mode the program additionally
     accumulates the Segment-Means state (kz/vz/gz/zsum) over real
     columns only.  Returns (jitted, layout, rules)."""
-    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len)
+    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len,
+                      _paged_placement(hp, paging))
     assert 1 <= chunk_len <= prefill_len, (chunk_len, prefill_len)
     rules = param_specs(params, mesh, cfg.vocab_size)
     pspecs = spec_tree(rules)
-    cspecs = cache_specs(cfg, lay, hp)
+    cspecs = cache_specs(cfg, lay, hp, paging)
     vocab_sharded = (rules["embed"]["table"].kind == "vocab")
     shared_rules = rules.get("shared")
     u, n_units, _ = cfg.scan_split
@@ -1368,7 +1550,8 @@ def make_chunk_prefill_step(cfg: ModelConfig, mesh, params, *,
                 f"chunked prefill needs position-addressed attention "
                 f"caches; arch {cfg.name!r} has block kind {kind!r}")
 
-    def body(params_local, cache_local, tokens, off, nreal):
+    def body_core(params_local, cache_local, tokens, off, nreal,
+                  page_map, state_map):
         trace_counts["chunk_prefill_step"] += 1
         j = jnp.arange(chunk_len)
         alive = (off[:, None] >= 0) & (j[None, :] < nreal[:, None])
@@ -1384,7 +1567,8 @@ def make_chunk_prefill_step(cfg: ModelConfig, mesh, params, *,
             for k, kind in enumerate(unit_kinds):
                 p = gather_tree(p_sl[k], rules["scan"][k])
                 x, nc = block_chunk_prefill(cfg, kind, p, shared, x,
-                                            c_sl[k], row_pos, off, lay, hp)
+                                            c_sl[k], row_pos, off, lay, hp,
+                                            page_map, state_map)
                 new.append(nc)
             return x, tuple(new)
 
@@ -1400,27 +1584,33 @@ def make_chunk_prefill_step(cfg: ModelConfig, mesh, params, *,
                       if shared_rules else None)
             x, nc = block_chunk_prefill(cfg, kind, p, shared, x,
                                         cache_local["tail"][t], row_pos,
-                                        off, lay, hp)
+                                        off, lay, hp, page_map, state_map)
             new_tail.append(nc)
         # no logits: the engine's rewind re-feeds the last prompt token
         # as the first decode step (idempotent K/V rewrite), which is
         # what produces the teacher-forced next-token logits
         return {"scan": list(new_stacks), "tail": new_tail}
 
+    if paging is not None:
+        body = body_core
+        in_specs = (pspecs, cspecs, P(None), P(None), P(None),
+                    P(None), P(None))
+    else:
+        def body(params_local, cache_local, tokens, off, nreal):
+            return body_core(params_local, cache_local, tokens, off,
+                             nreal, None, None)
+        in_specs = (pspecs, cspecs, P(lay.bspec, None), P(lay.bspec),
+                    P(lay.bspec))
     body_sm = shard_map(
         body, mesh=mesh,
-        in_specs=(pspecs, cspecs, P(lay.bspec, None), P(lay.bspec),
-                  P(lay.bspec)),
+        in_specs=in_specs,
         out_specs=cspecs,
         check_vma=False)
 
     sh = functools.partial(NamedSharding, mesh)
     jitted = jax.jit(
         body_sm,
-        in_shardings=(jax.tree.map(sh, pspecs),
-                      jax.tree.map(sh, cspecs),
-                      sh(P(lay.bspec, None)), sh(P(lay.bspec)),
-                      sh(P(lay.bspec))),
+        in_shardings=tuple(jax.tree.map(sh, s) for s in in_specs),
         out_shardings=jax.tree.map(sh, cspecs),
         donate_argnums=(1,),
     )
@@ -1473,7 +1663,8 @@ def packed_attention(q, k, v, valid, bias_self, k_new, v_new, axes, scale,
 
 
 def attn_packed(p, spec: AttnSpec, cfg: ModelConfig, x, c, meta,
-                lay: ServeLayout, hp: ServeHParams):
+                lay: ServeLayout, hp: ServeHParams,
+                page_map=None, state_map=None):
     """Attention sublayer over one token-packed tick.
 
     ``x`` (T,1,D) replicated; ``meta = (slot, pos, off, is_prefill,
@@ -1488,31 +1679,59 @@ def attn_packed(p, spec: AttnSpec, cfg: ModelConfig, x, c, meta,
     advances the per-request Segment-Means running state over the REAL
     prefill tokens only — the flat-token twin of the chunk path's
     accumulation, so a prompt that arrives packed produces bit-equal
-    gz/zsum (and kz/vz) to one that arrives chunked."""
+    gz/zsum (and kz/vz) to one that arrives chunked.
+
+    Paged mode (``page_map`` (n_slots, ppr) set): every replica holds
+    the full pool and packs every token (``row_loc = slot``), per-token
+    K/V writes scatter to (page, offset) addresses, the token's virtual
+    cache row gathers through its slot's page list, and the stat
+    combine runs over the sequence axes ONLY (batch replicas are
+    identical — a psum over them would over-count the prism
+    owner-select).  Prism state reads/writes go through ``state_map``
+    (n_slots,) into the state-page pool."""
     slot, pos, off, is_prefill, row_loc, owned = meta
     xn = norm(p["ln1"], x, cfg.norm_kind)
     rp = pos[:, None]                          # (T,1) token positions
     q = attn_project_q(p["attn"], spec, xn, rp)
     k_new, v_new = attn_project_kv(p["attn"], spec, xn, rp)
     scale = spec.head_dim ** -0.5
-    axes_all = tuple(lay.seq_axes) + tuple(lay.ba)
+    axes_all = (tuple(lay.seq_axes) if page_map is not None
+                else tuple(lay.seq_axes) + tuple(lay.ba))
 
     idx = _seq_index(lay.seq_axes)
     col, seq_owner, col_pos = _decode_cols(lay, idx, pos)
     alive = pos >= 0
     wr = seq_owner & owned & alive
-    k_c = _write_packed(c["k"], k_new[:, 0], row_loc, col, wr)
-    v_c = _write_packed(c["v"], v_new[:, 0], row_loc, col, wr)
-    new_c = dict(c, k=k_c, v=v_c)
-
-    b_loc = k_c.shape[0]
-    row = jnp.clip(row_loc, 0, b_loc - 1)
-    k_t = jnp.take(k_c, row, axis=0)           # (T, cap_l, Hkv, hd)
-    v_t = jnp.take(v_c, row, axis=0)
+    if page_map is not None:
+        pc = c["k"].shape[1]
+        b_loc = page_map.shape[0]
+        row = jnp.clip(row_loc, 0, b_loc - 1)
+        colc = jnp.clip(col, 0, lay.cap_l - 1)
+        pages_t = jnp.take(page_map, row, axis=0)          # (T, ppr)
+        pg = jnp.take_along_axis(pages_t, (colc // pc)[:, None],
+                                 axis=1)[:, 0]
+        k_pool = _write_pool(c["k"], k_new[:, 0], pg, colc % pc, wr)
+        v_pool = _write_pool(c["v"], v_new[:, 0], pg, colc % pc, wr)
+        new_c = dict(c, k=k_pool, v=v_pool)
+        # one gather per SLOT, then a per-token row take — same shape
+        # the dense path produces from its row cache
+        k_t = jnp.take(_gather_pages(k_pool, page_map), row, axis=0)
+        v_t = jnp.take(_gather_pages(v_pool, page_map), row, axis=0)
+        mapped = jnp.take(jnp.repeat(page_map >= 0, pc, axis=1),
+                          row, axis=0)                     # (T, cap_l)
+    else:
+        k_c = _write_packed(c["k"], k_new[:, 0], row_loc, col, wr)
+        v_c = _write_packed(c["v"], v_new[:, 0], row_loc, col, wr)
+        new_c = dict(c, k=k_c, v=v_c)
+        b_loc = k_c.shape[0]
+        row = jnp.clip(row_loc, 0, b_loc - 1)
+        k_t = jnp.take(k_c, row, axis=0)       # (T, cap_l, Hkv, hd)
+        v_t = jnp.take(v_c, row, axis=0)
+        mapped = True
 
     # prior columns: strictly before the request's tick-start offset,
     # on the batch shard holding the slot (others: empty stats)
-    valid = ((owned & alive)[:, None]
+    valid = (mapped & (owned & alive)[:, None]
              & (col_pos[None, :] < jnp.maximum(off, 0)[:, None]))
     # intra-tick columns: same request only — tokens of different
     # requests must never attend to each other — causal, each column
@@ -1532,15 +1751,22 @@ def attn_packed(p, spec: AttnSpec, cfg: ModelConfig, x, c, meta,
         # per-request input gathered per token; prefill tokens keep
         # the exact combine above, as on the chunked path
         lo, hi, mid, _, shard_of = _means_meta(lay)
-        cnt_t = jnp.take(c["gz"], row, axis=0)             # (T, m)
+        if state_map is not None:
+            st = jnp.clip(jnp.take(state_map, row),
+                          0, c["gz"].shape[0] - 1)         # (T,)
+            cnt_t = jnp.take(c["gz"], st, axis=0)          # (T, m)
+            kz_t = jnp.take(c["kz"], st, axis=0)
+            vz_t = jnp.take(c["vz"], st, axis=0)
+        else:
+            cnt_t = jnp.take(c["gz"], row, axis=0)         # (T, m)
+            kz_t = jnp.take(c["kz"], row, axis=0)
+            vz_t = jnp.take(c["vz"], row, axis=0)
         gz = jnp.where(
             (jnp.asarray(shard_of)[None, :] != idx)
             & (jnp.asarray(lo)[None, :] + cnt_t <= pos[:, None] + 1)
             & (owned & alive)[:, None],
             cnt_t, 0.0)
-        kz_t = jnp.take(c["kz"], row, axis=0)
-        vz_t = jnp.take(c["vz"], row, axis=0)
-        valid_le = ((owned & alive)[:, None]
+        valid_le = (mapped & (owned & alive)[:, None]
                     & (col_pos[None, :] <= pos[:, None]))
         sel = seq_owner & owned & alive & (is_prefill == 0)
         out_pz = decode_attention(q, k_t, v_t, valid_le, axes_all,
@@ -1563,8 +1789,14 @@ def attn_packed(p, spec: AttnSpec, cfg: ModelConfig, x, c, meta,
         onehot = r_upd[:, None] == jnp.arange(b_loc)[None, :]
         seg = ((jnp.asarray(lo)[None, :] <= pos[:, None])
                & (pos[:, None] <= jnp.asarray(hi)[None, :]))
+        if state_map is not None:
+            S = c["zsum"].shape[0]
+            sr = jnp.clip(state_map, 0, S - 1)
+            zs_prev = jnp.take(c["zsum"], sr, axis=0)      # (n_slots, ...)
+        else:
+            zs_prev = c["zsum"]
         zsum = jnp.where((act & (off_b == 0))[:, None, None], 0.0,
-                         c["zsum"])
+                         zs_prev)
         zsum = zsum + jnp.einsum("tb,tm,td->bmd",
                                  onehot.astype(jnp.float32),
                                  seg.astype(jnp.float32),
@@ -1574,11 +1806,24 @@ def attn_packed(p, spec: AttnSpec, cfg: ModelConfig, x, c, meta,
         kz, vz = attn_project_kv(p["attn"], spec,
                                  norm(p["ln1"], z, cfg.norm_kind),
                                  jnp.asarray(mid, jnp.float32))
-        sel_b = act[:, None, None, None]
-        new_c["kz"] = jnp.where(sel_b, kz.astype(c["kz"].dtype), c["kz"])
-        new_c["vz"] = jnp.where(sel_b, vz.astype(c["vz"].dtype), c["vz"])
-        new_c["gz"] = jnp.where(act[:, None], cnt, c["gz"])
-        new_c["zsum"] = zsum
+        if state_map is not None:
+            # unique state row per active slot; inactive slots route
+            # OOB and keep their pool rows (the dense where(act) select)
+            dst = jnp.where(act & (state_map >= 0), state_map, S)
+            new_c["kz"] = c["kz"].at[dst].set(
+                kz.astype(c["kz"].dtype), mode="drop")
+            new_c["vz"] = c["vz"].at[dst].set(
+                vz.astype(c["vz"].dtype), mode="drop")
+            new_c["gz"] = c["gz"].at[dst].set(cnt, mode="drop")
+            new_c["zsum"] = c["zsum"].at[dst].set(zsum, mode="drop")
+        else:
+            sel_b = act[:, None, None, None]
+            new_c["kz"] = jnp.where(sel_b, kz.astype(c["kz"].dtype),
+                                    c["kz"])
+            new_c["vz"] = jnp.where(sel_b, vz.astype(c["vz"].dtype),
+                                    c["vz"])
+            new_c["gz"] = jnp.where(act[:, None], cnt, c["gz"])
+            new_c["zsum"] = zsum
 
     o = attn_output(p["attn"], out)
     if cfg.parallel_block:
@@ -1587,12 +1832,14 @@ def attn_packed(p, spec: AttnSpec, cfg: ModelConfig, x, c, meta,
 
 
 def block_packed(cfg: ModelConfig, kind: str, p, shared, x, c, meta,
-                 lay: ServeLayout, hp: ServeHParams):
+                 lay: ServeLayout, hp: ServeHParams,
+                 page_map=None, state_map=None):
     """One residual block over a token-packed tick.  Returns
     (x, new_cache).  Same chunkable-kind restriction as the engine."""
     if kind in ("attn", "moe"):
         spec = T.attn_spec(cfg, kind)
-        o, c = attn_packed(p, spec, cfg, x, c, meta, lay, hp)
+        o, c = attn_packed(p, spec, cfg, x, c, meta, lay, hp,
+                           page_map, state_map)
         x = x + o
         if cfg.parallel_block:
             return x, c
@@ -1606,7 +1853,8 @@ def block_packed(cfg: ModelConfig, kind: str, p, shared, x, c, meta,
         return x, c
     if kind == "shared_attn":
         spec = T.attn_spec(cfg, "attn")
-        o, c = attn_packed(shared, spec, cfg, x, c, meta, lay, hp)
+        o, c = attn_packed(shared, spec, cfg, x, c, meta, lay, hp,
+                           page_map, state_map)
         x = x + o
         x = x + mlp(shared["mlp"], norm(shared["ln2"], x, cfg.norm_kind),
                     cfg.mlp_kind)
@@ -1619,9 +1867,11 @@ def block_packed(cfg: ModelConfig, kind: str, p, shared, x, c, meta,
 def make_packed_step(cfg: ModelConfig, mesh, params, *,
                      batch: int, cap: int, prefill_len: int,
                      token_budget: int,
-                     hp: ServeHParams = ServeHParams()):
+                     hp: ServeHParams = ServeHParams(),
+                     paging: PagedLayout | None = None):
     """jitted (params, cache, tokens (T,), slot (T,), pos (T,),
-    off (T,), is_prefill (T,)) -> (logits (min(batch,T), V), cache) —
+    off (T,), is_prefill (T,)) -> (logits (min(batch,T), V), cache)
+    (paged: two trailing (page_map (B,ppr), state_map (B,)) inputs) —
     ONE compiled program per engine tick over a flat token-packed
     batch of ``T = token_budget`` mixed prefill + decode tokens.
 
@@ -1647,12 +1897,13 @@ def make_packed_step(cfg: ModelConfig, mesh, params, *,
     sequential serving in both decode modes (the packed equivalence
     tests pin this on the 2x4 mesh).  Returns
     (jitted, layout, rules, logits_spec)."""
-    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len)
+    lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len,
+                      _paged_placement(hp, paging))
     assert token_budget >= 1, token_budget
     assert not hp.decode_tp, "packed serving does not support decode_tp"
     rules = param_specs(params, mesh, cfg.vocab_size)
     pspecs = spec_tree(rules)
-    cspecs = cache_specs(cfg, lay, hp)
+    cspecs = cache_specs(cfg, lay, hp, paging)
     vocab_sharded = (rules["embed"]["table"].kind == "vocab")
     shared_rules = rules.get("shared")
     u, n_units, _ = cfg.scan_split
@@ -1667,11 +1918,18 @@ def make_packed_step(cfg: ModelConfig, mesh, params, *,
     b_loc = batch // n_b
     head_rows = min(batch, token_budget)   # decode tokens pack first
 
-    def body(params_local, cache_local, tokens, slot, pos, off, pre):
+    def body_core(params_local, cache_local, tokens, slot, pos, off,
+                  pre, page_map, state_map):
         trace_counts["packed_step"] += 1
-        didx = _batch_index(lay.ba)
-        row_loc = jnp.where(slot >= 0, slot - didx * b_loc, -1)
-        owned = (row_loc >= 0) & (row_loc < b_loc)
+        if paging is not None:
+            # pool replicated over the batch axes: every replica packs
+            # every token against the full page pool
+            row_loc = slot
+            owned = slot >= 0
+        else:
+            didx = _batch_index(lay.ba)
+            row_loc = jnp.where(slot >= 0, slot - didx * b_loc, -1)
+            owned = (row_loc >= 0) & (row_loc < b_loc)
         meta = (slot, pos, off, pre, row_loc, owned)
         x = embed_token(cfg, params_local, rules, tokens, pos,
                         sharded_vocab=vocab_sharded)
@@ -1684,7 +1942,7 @@ def make_packed_step(cfg: ModelConfig, mesh, params, *,
             for j, kind in enumerate(unit_kinds):
                 p = gather_tree(p_sl[j], rules["scan"][j])
                 x, nc = block_packed(cfg, kind, p, shared, x, c_sl[j],
-                                     meta, lay, hp)
+                                     meta, lay, hp, page_map, state_map)
                 new.append(nc)
             return x, tuple(new)
 
@@ -1699,7 +1957,8 @@ def make_packed_step(cfg: ModelConfig, mesh, params, *,
             shared = (gather_tree(params_local["shared"], shared_rules)
                       if shared_rules else None)
             x, nc = block_packed(cfg, kind, p, shared, x,
-                                 cache_local["tail"][t], meta, lay, hp)
+                                 cache_local["tail"][t], meta, lay, hp,
+                                 page_map, state_map)
             new_tail.append(nc)
 
         x = norm(params_local["final_norm"], x, cfg.norm_kind)
@@ -1717,19 +1976,25 @@ def make_packed_step(cfg: ModelConfig, mesh, params, *,
 
     vspec = P(None)                    # packed vectors ride replicated
     lspec = P(None, "model" if vocab_sharded else None)
+    if paging is not None:
+        body = body_core
+        in_specs = (pspecs, cspecs, vspec, vspec, vspec, vspec, vspec,
+                    P(None), P(None))
+    else:
+        def body(params_local, cache_local, tokens, slot, pos, off, pre):
+            return body_core(params_local, cache_local, tokens, slot,
+                             pos, off, pre, None, None)
+        in_specs = (pspecs, cspecs, vspec, vspec, vspec, vspec, vspec)
     body_sm = shard_map(
         body, mesh=mesh,
-        in_specs=(pspecs, cspecs, vspec, vspec, vspec, vspec, vspec),
+        in_specs=in_specs,
         out_specs=(lspec, cspecs),
         check_vma=False)
 
     sh = functools.partial(NamedSharding, mesh)
     jitted = jax.jit(
         body_sm,
-        in_shardings=(jax.tree.map(sh, pspecs),
-                      jax.tree.map(sh, cspecs),
-                      sh(vspec), sh(vspec), sh(vspec), sh(vspec),
-                      sh(vspec)),
+        in_shardings=tuple(jax.tree.map(sh, s) for s in in_specs),
         out_shardings=(sh(lspec), jax.tree.map(sh, cspecs)),
         donate_argnums=(1,),
     )

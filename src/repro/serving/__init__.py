@@ -2,7 +2,8 @@
 decode runtime (docs/serving.md)."""
 from .sampling import SamplingParams, sample_token
 from .scheduler import Request, RequestState, FifoScheduler, EngineStats
-from .engine import ServingEngine
+from .engine import EngineConfig, ServingEngine
 
 __all__ = ["SamplingParams", "sample_token", "Request", "RequestState",
-           "FifoScheduler", "EngineStats", "ServingEngine"]
+           "FifoScheduler", "EngineStats", "EngineConfig",
+           "ServingEngine"]

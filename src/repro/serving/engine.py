@@ -27,7 +27,8 @@ token_budget)`` so alternating tick kinds never retrace):
   * ``chunk``  — the ``prefill_mode='chunked'`` oracle: batch =
     n_slots, up to chunk_len prompt tokens per row at per-row runtime
     offsets, interleaved with decodes under ``decode_per_prefill``.
-  * the legacy ``padded`` trio (flush + grow + insert).
+  * the legacy ``padded`` flush (prefill at decode capacity + one
+    row splice per admitted request, via ``KVCache.insert_row``).
 
 The admission rewind: prefill programs return no sampled tokens; when
 a request's last prompt token lands, the slot starts decoding at
@@ -53,44 +54,110 @@ quantifies the differences.
 """
 from __future__ import annotations
 
-import functools
 import heapq
+import math
 import time
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding
 
 from ..core.protocol import PrismConfig
 from ..models.config import ModelConfig
-from ..runtime.serve import (ServeHParams, cache_specs, grow_cache,
-                             init_cache, insert_cache_row, make_layout,
-                             make_chunk_prefill_step, make_packed_step,
-                             make_prefill_step, make_serve_step)
+from ..runtime.paging import make_paged_layout
+from ..runtime.serve import (ServeHParams, _paged_placement, make_layout,
+                             make_chunk_prefill_step, make_kv_cache,
+                             make_packed_step, make_prefill_step,
+                             make_serve_step, seq_shards)
 from .sampling import SamplingParams, sample_token
 from .scheduler import EngineStats, FifoScheduler, Request
 
 
+@dataclass(frozen=True)
+class EngineConfig:
+    """Validated engine configuration — the single construction path
+    for ``ServingEngine`` (launch, examples, and benches all build one
+    of these; the legacy kwarg constructor is a thin shim over it).
+
+    ``__post_init__`` normalizes the derived fields so an EngineConfig
+    is always self-consistent by the time the engine sees it:
+    ``chunk_len`` clamps to ``[1, prefill_len]``, ``token_budget``
+    defaults to ``n_slots + chunk_len`` (the smallest budget that keeps
+    a full decode fleet moving while packing prefill work),
+    ``prefill_mode='padded'`` forces the dense rowset (the legacy
+    flush+insert admission predates paging), and ``prefix_cache``
+    defaults on exactly where it is sound: the paged exact engine
+    (paged prism keeps the aligned Segment-Means placement, where a
+    partial page set never covers a position prefix)."""
+    n_slots: int
+    prefill_len: int
+    max_cache: int
+    hp: ServeHParams = ServeHParams()
+    prism: PrismConfig | None = None
+    decode_per_prefill: int = 4
+    gang: bool = False
+    chunk_len: int = 64
+    prefill_mode: str = "packed"
+    token_budget: int | None = None
+    pad_id: int = 0
+    paged: bool = True                 # page-table cache (the default)
+    page_tokens: int | None = None     # page size in token positions
+    n_pages: int | None = None         # pool size (default: slot parity)
+    prefix_cache: bool | None = None   # shared-prefix COW reuse
+
+    def __post_init__(self):
+        if self.prefill_mode not in ("packed", "chunked", "padded"):
+            raise ValueError(f"prefill_mode {self.prefill_mode!r} not in "
+                             "('packed', 'chunked', 'padded')")
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots {self.n_slots} < 1")
+        if not 1 <= self.prefill_len <= self.max_cache:
+            raise ValueError(
+                f"prefill_len {self.prefill_len} not in "
+                f"[1, max_cache={self.max_cache}]")
+        set_ = lambda k, v: object.__setattr__(self, k, v)
+        set_("chunk_len",
+             max(1, min(self.chunk_len, self.prefill_len)))
+        if self.token_budget is None:
+            set_("token_budget", self.n_slots + self.chunk_len)
+        if self.token_budget < self.n_slots:
+            raise ValueError(
+                f"token_budget {self.token_budget} < n_slots "
+                f"{self.n_slots}: every decoding slot needs its token "
+                "in each tick")
+        if self.prefill_mode == "padded" and self.paged:
+            set_("paged", False)       # legacy flush+insert admission
+        ok_prefix = self.paged and self.hp.decode_mode == "exact"
+        if self.prefix_cache is None:
+            set_("prefix_cache", ok_prefix)
+        elif self.prefix_cache and not ok_prefix:
+            raise ValueError(
+                "prefix_cache requires the paged cache in exact decode "
+                f"mode (paged={self.paged}, "
+                f"decode_mode={self.hp.decode_mode!r})")
+        if self.prism is None:
+            set_("prism", PrismConfig(
+                P=1, cr=self.hp.means_cr,
+                mode="prism" if self.hp.decode_mode == "prism"
+                else "voltage"))
+
+
 class ServingEngine:
     """Multiplexes independent requests through a fixed pool of decode
-    slots backed by one batched, sequence-sharded KV cache."""
+    slots backed by one ``KVCache`` (paged pool + page table by
+    default; the dense rowset survives as the ``paged=False`` oracle
+    and the padded-admission path)."""
 
-    def __init__(self, cfg: ModelConfig, mesh, params, *,
-                 n_slots: int, prefill_len: int, max_cache: int,
-                 hp: ServeHParams = ServeHParams(),
-                 prism: PrismConfig | None = None,
-                 decode_per_prefill: int = 4, gang: bool = False,
-                 chunk_len: int = 64, prefill_mode: str = "packed",
-                 token_budget: int | None = None,
-                 pad_id: int = 0, clock=time.monotonic):
-        if prefill_mode not in ("packed", "chunked", "padded"):
-            raise ValueError(f"prefill_mode {prefill_mode!r} not in "
-                             "('packed', 'chunked', 'padded')")
-        if prism is None:
-            prism = PrismConfig(
-                P=1, cr=hp.means_cr,
-                mode="prism" if hp.decode_mode == "prism" else "voltage")
+    def __init__(self, cfg: ModelConfig, mesh, params,
+                 config: EngineConfig | None = None, *,
+                 clock=time.monotonic, **kwargs):
+        if config is None:
+            config = EngineConfig(**kwargs)   # legacy kwarg construction
+        elif kwargs:
+            raise TypeError(
+                f"pass either an EngineConfig or legacy kwargs, not "
+                f"both (got extra {sorted(kwargs)})")
         unsupported = {k for k in cfg.block_kinds
                        if k in ("mlstm", "slstm", "mamba", "attn_local")}
         if unsupported:
@@ -116,54 +183,82 @@ class ServingEngine:
                 f"{cfg.name!r} (arch_type={cfg.arch_type!r}, "
                 f"frontend={cfg.frontend!r}) needs embedding inputs")
         self.cfg, self.mesh, self.params = cfg, mesh, params
-        self.n_slots, self.prefill_len = n_slots, prefill_len
-        self.prefill_mode = prefill_mode
-        self.chunk_len = max(1, min(chunk_len, prefill_len))
-        if token_budget is None:
-            # every decoding slot's token plus one chunk's worth of
-            # prompt tokens — the smallest budget that keeps a full
-            # decode fleet moving while still packing prefill work
-            token_budget = n_slots + self.chunk_len
-        if token_budget < n_slots:
-            raise ValueError(
-                f"token_budget {token_budget} < n_slots {n_slots}: "
-                "every decoding slot needs its token in each tick")
-        self.token_budget = int(token_budget)
-        self.pad_id, self._clock = pad_id, clock
-        self._hp, self._prism, self._max_cache = hp, prism, max_cache
+        self.config = config
+        hp, prism = config.hp, config.prism
+        n_slots = config.n_slots
+        self.n_slots, self.prefill_len = n_slots, config.prefill_len
+        self.prefill_mode = config.prefill_mode
+        self.chunk_len = config.chunk_len
+        self.token_budget = int(config.token_budget)
+        self.pad_id, self._clock = config.pad_id, clock
+        self._hp, self._prism = hp, prism
+        self._max_cache = config.max_cache
 
-        self.layout = make_layout(cfg, mesh, n_slots, max_cache, hp,
-                                  prefill_len)
-        # pin the decode-layout cache sharding on every path that feeds
-        # the step functions (their donated args reject resharding)
-        self._cache_sh = jax.tree.map(
-            lambda s: NamedSharding(mesh, s),
-            cache_specs(cfg, self.layout, hp))
+        # cache layout + paging geometry (the paged placement depends
+        # only on decode mode, not on the pool shape, so the aligned
+        # base layout can seed the page-size derivation)
+        base = make_layout(cfg, mesh, n_slots, config.max_cache, hp,
+                           config.prefill_len)
+        self._paging = (self._derive_paging(base, config)
+                        if config.paged else None)
+        self.layout = make_layout(cfg, mesh, n_slots, config.max_cache,
+                                  hp, config.prefill_len,
+                                  _paged_placement(hp, self._paging))
+        self._paged = self._paging is not None
+        self._prefix_on = bool(config.prefix_cache) and self._paged
+        # prism pages the means state per request but keeps the aligned
+        # placement — rows are whole-row allocations, prefixes unshared
+        self._full_row = self._paged and hp.decode_mode == "prism"
+
+        # the one cache object: device storage + (paged) page table /
+        # prefix cache + the alloc/bind/free lifecycle
+        self._kv = make_kv_cache(cfg, mesh, self.layout, n_slots, hp,
+                                 paging=self._paging,
+                                 prefix_cache=self._prefix_on)
         # compiled-program cache: one entry per (kind, token_budget),
         # so ticks that alternate program kinds (packed <-> decode)
         # reuse the SAME jitted callable and never retrace —
         # runtime.serve.trace_counts pins this in the tests
         self._programs: dict = {}
         self._step = self._program("decode")
-        if prefill_mode == "packed":
+        if self.prefill_mode == "packed":
             self._packed = self._program("packed", self.token_budget)
-        elif prefill_mode == "chunked":
+        elif self.prefill_mode == "chunked":
             self._chunk = self._program("chunk")
         else:
             self._prefill = self._program("padded_prefill")
-            self._grow = self._program("grow")
-            self._insert = self._program("insert")
-        self._cache = jax.device_put(
-            init_cache(cfg, self.layout, n_slots, hp), self._cache_sh)
 
-        self._sched = FifoScheduler(n_slots,
-                                    decode_per_prefill=decode_per_prefill,
-                                    gang=gang)
+        self._sched = FifoScheduler(
+            n_slots, decode_per_prefill=config.decode_per_prefill,
+            gang=config.gang)
         self.stats = EngineStats(n_slots=n_slots)
         self._pending: list = []       # heap of (arrival, rid, Request)
         self._results: dict = {}       # rid -> RequestState
+        self._plans: dict = {}         # rid -> reserved AdmitPlan
         self._next_rid = 0
         self._t0 = None                # clock origin (first submit/run)
+
+    @staticmethod
+    def _derive_paging(base, config: EngineConfig):
+        """Pool geometry from the layout.  The default page size aims
+        for ~16-token spans while keeping ``page_cols`` a divisor of
+        both the per-shard prefill region and row capacity (whole-page
+        static slices everywhere)."""
+        if config.page_tokens is None:
+            pc = math.gcd(math.gcd(base.n_loc0, base.cap_l),
+                          max(1, 16 // base.n_seq))
+            page_tokens = pc * base.n_seq
+        else:
+            page_tokens = config.page_tokens
+        return make_paged_layout(base, page_tokens=page_tokens,
+                                 n_pages=config.n_pages,
+                                 n_slots=config.n_slots)
+
+    @property
+    def kv_cache(self):
+        """The engine's ``KVCache`` (page table, prefix cache, device
+        storage) — exposed for tests, stats, and offload tiers."""
+        return self._kv
 
     # ------------------------------------------------------------------
     # compiled-program cache
@@ -182,7 +277,8 @@ class ServingEngine:
             return self._programs[key]
         cfg, mesh, params, hp = self.cfg, self.mesh, self.params, self._hp
         kw = dict(batch=self.n_slots, cap=self._max_cache,
-                  prefill_len=self.prefill_len, hp=hp)
+                  prefill_len=self.prefill_len, hp=hp,
+                  paging=self._paging)
         if kind == "decode":
             prog, lay, _, _ = make_serve_step(cfg, mesh, params, **kw)
             assert lay == self.layout, (lay, self.layout)
@@ -195,33 +291,20 @@ class ServingEngine:
                 cfg, mesh, params, chunk_len=self.chunk_len, **kw)
             assert lay == self.layout, (lay, self.layout)
         elif kind == "padded_prefill":
-            # legacy padded admission (make_prefill_step re-derives
+            # legacy padded admission, dense rowset only.  The captured
+            # cache rows are sized straight to decode capacity (``cap``)
+            # so admission is one splice per request — the old 'grow'
+            # program is gone.  (make_prefill_step re-derives
             # PrismConfig.P from the layout's n_seq; only mode/cr of
-            # ``prism`` matter here)
+            # ``prism`` matter here.)
             prog, lay_p, _, _ = make_prefill_step(
                 cfg, mesh, params, self._prism, batch=self.n_slots,
-                n=self.prefill_len, hp=hp)
-            assert lay_p == self._prefill_layout(), (lay_p, self.layout)
-        elif kind == "grow":
-            prog = jax.jit(
-                functools.partial(grow_cache,
-                                  lay_from=self._prefill_layout(),
-                                  lay_to=self.layout),
-                out_shardings=self._cache_sh)
-        elif kind == "insert":
-            prog = jax.jit(insert_cache_row, donate_argnums=(0,),
-                           out_shardings=self._cache_sh)
+                n=self.prefill_len, hp=hp, cap=self._max_cache)
+            assert lay_p == self.layout, (lay_p, self.layout)
         else:
             raise ValueError(kind)
         self._programs[key] = prog
         return prog
-
-    def _prefill_layout(self):
-        """The padded-admission prefill layout (cap == prefill_len) —
-        derived, so 'grow' never depends on 'padded_prefill' having
-        been built first."""
-        return make_layout(self.cfg, self.mesh, self.n_slots,
-                           self.prefill_len, self._hp)
 
     # ------------------------------------------------------------------
     # submission
@@ -291,12 +374,12 @@ class ServingEngine:
                 return self._padded_flush()
         elif self.prefill_mode == "chunked":
             if sch.want_admit():
-                sch.admit(self.now())      # host-side: assign slots only
+                self._admit()              # host-side: slots + pages
             if sch.want_chunk():
                 return self._chunk_step()
         else:                              # packed: one program per tick
             if sch.want_admit():
-                sch.admit(self.now())      # host-side: assign slots only
+                self._admit()              # host-side: slots + pages
             if any(st.prefilling for st in sch.active.values()):
                 return self._packed_tick()
 
@@ -308,8 +391,9 @@ class ServingEngine:
                 tok[st.slot] = st.next_token
                 pos[st.slot] = st.pos
             t0 = self.now()
-            logits, self._cache = self._step(
-                self.params, self._cache, jnp.asarray(tok), jnp.asarray(pos))
+            logits, self._kv.storage = self._step(
+                self.params, self._kv.storage, jnp.asarray(tok),
+                jnp.asarray(pos), *self._maps())
             rows = np.asarray(jax.device_get(logits))
             now = self.now()
             self.stats.step_latency.append(now - t0)
@@ -321,6 +405,64 @@ class ServingEngine:
             self.stats.t_end = self.now()
             return "decode"
         return "idle"
+
+    # ------------------------------------------------------------------
+    # admission (page-aware) + per-tick device maps
+    # ------------------------------------------------------------------
+    def _maps(self) -> tuple:
+        """The paged step programs take the per-slot (page_map,
+        state_map) device arrays each tick; dense programs take
+        nothing."""
+        if not self._paged:
+            return ()
+        return (jnp.asarray(self._kv.page_map(self.n_slots)),
+                jnp.asarray(self._kv.state_map(self.n_slots)))
+
+    def _admit_gate(self, req) -> bool:
+        """Page-aware admission check, consulted by the scheduler on
+        the FIFO head: plan the request's page needs (prefix lookup
+        included), reclaim LRU prefix entries if the free list is
+        short, and RESERVE the pages before the scheduler pops the
+        request — so several admissions in one engine loop can never
+        double-count the free list."""
+        kv = self._kv
+        plan = kv.plan(req.prompt, req.max_new_tokens,
+                       use_prefix=self._prefix_on,
+                       full_row=self._full_row)
+        if not kv.can_admit(plan, reclaim=False):
+            if kv.prefix is not None:
+                kv.prefix.reclaim(plan.fresh_pages)
+                # reclaim may have dropped the very entry the plan
+                # shares — re-plan against the surviving entries
+                plan = kv.plan(req.prompt, req.max_new_tokens,
+                               use_prefix=self._prefix_on,
+                               full_row=self._full_row)
+            if not kv.can_admit(plan, reclaim=False):
+                self.stats.out_of_pages += 1
+                return False
+        if not kv.reserve(req.rid, plan):
+            self.stats.out_of_pages += 1
+            return False
+        self._plans[req.rid] = plan
+        return True
+
+    def _admit(self) -> list:
+        """Assign free slots to queued requests; in paged mode each
+        admission binds its reserved pages to the slot and a prefix hit
+        fast-forwards the prompt past the tokens its shared pages
+        already hold."""
+        states = self._sched.admit(
+            self.now(), gate=self._admit_gate if self._paged else None)
+        for st in states:
+            if not self._paged:
+                continue
+            self._kv.bind(st.req.rid, st.slot)
+            plan = self._plans.pop(st.req.rid)
+            if plan.covered:
+                st.nprefilled = plan.covered
+                self.stats.prefix_hits += 1
+                self.stats.prefix_tokens_saved += plan.covered
+        return states
 
     def _advance_decode(self, st, logits_row, now):
         """Sample one token for a decode-phase request and advance /
@@ -334,6 +476,11 @@ class ServingEngine:
         st.pos += 1
         st.next_token = t
         if st.finished():
+            if self._paged:
+                # release the request's pages (prefix-registered full
+                # prompt pages survive under their cache entries)
+                self._kv.free(st.slot, st.req.prompt
+                              if self._prefix_on else None)
             self._sched.evict(st, now)
             self._results[st.req.rid] = st
             self.stats.completed += 1
@@ -373,9 +520,10 @@ class ServingEngine:
             n_prefill += take
 
         t0 = self.now()
-        logits, self._cache = self._packed(
-            self.params, self._cache, jnp.asarray(tok), jnp.asarray(slot),
-            jnp.asarray(pos), jnp.asarray(off), jnp.asarray(pre))
+        logits, self._kv.storage = self._packed(
+            self.params, self._kv.storage, jnp.asarray(tok),
+            jnp.asarray(slot), jnp.asarray(pos), jnp.asarray(off),
+            jnp.asarray(pre), *self._maps())
         rows = np.asarray(jax.device_get(logits))
         now = self.now()
         self.stats.step_latency.append(now - t0)
@@ -417,9 +565,9 @@ class ServingEngine:
                 st.nprefilled:st.nprefilled + take]
             off[st.slot] = st.nprefilled
             nreal[st.slot] = take
-        self._cache = self._chunk(self.params, self._cache,
-                                  jnp.asarray(tokens), jnp.asarray(off),
-                                  jnp.asarray(nreal))
+        self._kv.storage = self._chunk(self.params, self._kv.storage,
+                                       jnp.asarray(tokens), jnp.asarray(off),
+                                       jnp.asarray(nreal), *self._maps())
         for st in states:
             st.nprefilled += int(nreal[st.slot])
             if not st.prefilling:
@@ -436,8 +584,9 @@ class ServingEngine:
 
     def _padded_flush(self) -> str:
         """Legacy admission: right-pad every admitted prompt to
-        ``prefill_len``, one monolithic prefill, grow + splice each row
-        into its slot, start decoding at the rewind position."""
+        ``prefill_len``, one monolithic prefill (its cache rows come out
+        sized to decode capacity — no separate grow step), splice each
+        row into its slot, start decoding at the rewind position."""
         sch = self._sched
         batch = np.full((self.n_slots, self.prefill_len), self.pad_id,
                         np.int32)
@@ -446,11 +595,8 @@ class ServingEngine:
             batch[i, :len(st.req.prompt)] = st.req.prompt
         _, fresh = self._prefill(self.params, {"tokens":
                                                jnp.asarray(batch)})
-        grown = self._grow(fresh)
         for i, st in enumerate(states):
-            self._cache = self._insert(self._cache, grown,
-                                       jnp.asarray(i, jnp.int32),
-                                       jnp.asarray(st.slot, jnp.int32))
+            self._kv.insert_row(fresh, i, st.slot)
             st.begin_decode()
             self.stats.prefill_tokens += len(st.req.prompt)
         self.stats.prefills += 1

@@ -126,6 +126,9 @@ class EngineStats:
     packed_prefill_tokens: int = 0     # real prompt tokens packed
     completed: int = 0
     generated_tokens: int = 0
+    out_of_pages: int = 0              # admissions blocked on the free list
+    prefix_hits: int = 0               # admissions that mapped a prefix
+    prefix_tokens_saved: int = 0       # prompt tokens never prefilled
     t_start: float | None = None
     t_end: float | None = None
 
@@ -156,6 +159,9 @@ class EngineStats:
             "packed_ticks": self.packed_ticks,
             "packed_decode_tokens": self.packed_decode_tokens,
             "packed_prefill_tokens": self.packed_prefill_tokens,
+            "out_of_pages": self.out_of_pages,
+            "prefix_hits": self.prefix_hits,
+            "prefix_tokens_saved": self.prefix_tokens_saved,
         }
 
 
@@ -261,16 +267,26 @@ class FifoScheduler:
         self._decodes_since_prefill = 0
 
     # -- transitions -------------------------------------------------------
-    def admit(self, now: float) -> list:
+    def admit(self, now: float, gate=None) -> list:
         """Pop FIFO requests into free slots (lowest slot first) and
-        return the new RequestStates, in admission order."""
+        return the new RequestStates, in admission order.
+
+        ``gate(request) -> bool`` is the page-aware admission check: it
+        is consulted on the queue HEAD before the pop, and a False stops
+        admission for this call (strict FIFO — later, smaller requests
+        never jump an out-of-pages head; the engine retries next tick
+        once eviction or prefix reclaim refills the free list).  A True
+        gate may reserve resources, so the pop must follow it."""
         states = []
         while self.queue and self.free_slots:
+            if gate is not None and not gate(self.queue[0]):
+                break
             slot = self.free_slots.pop(0)
             st = RequestState(self.queue.popleft(), slot, now)
             self.active[slot] = st
             states.append(st)
-        self._decodes_since_prefill = 0
+        if states:
+            self._decodes_since_prefill = 0
         return states
 
     def evict(self, st: RequestState, now: float):

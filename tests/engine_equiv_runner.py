@@ -45,7 +45,8 @@ CFG = ModelConfig(
 
 
 def check(mode: str, chunk_len: int, *, ground_truth: bool = False,
-          prefill_mode: str = "chunked", token_budget: int = 11) -> bool:
+          prefill_mode: str = "chunked", token_budget: int = 11,
+          paged: bool = True) -> bool:
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     params = T.init(CFG, jax.random.PRNGKey(0))
     hp = ServeHParams(decode_mode=mode, ssm_chunk=8, means_cr=4.0)
@@ -59,7 +60,7 @@ def check(mode: str, chunk_len: int, *, ground_truth: bool = False,
                             size=int(rng.integers(8, 33))).tolist()
                for _ in range(6)]
 
-    eng = ServingEngine(CFG, mesh, params, **kw)
+    eng = ServingEngine(CFG, mesh, params, paged=paged, **kw)
     for p in prompts[:4]:
         eng.submit(p, max_new_tokens=8)
     for _ in range(4):                       # decode before late arrivals
@@ -68,7 +69,11 @@ def check(mode: str, chunk_len: int, *, ground_truth: bool = False,
         eng.submit(p, max_new_tokens=8)
     concurrent = eng.run()
 
-    seq = ServingEngine(CFG, mesh, params, **kw)
+    # the sequential oracle runs on the DENSE rowset, so this check
+    # doubles as the paged ≡ unpaged equivalence pin (exact mode is
+    # further pinned below against T.forward, which shares no serving
+    # code at all)
+    seq = ServingEngine(CFG, mesh, params, paged=False, **kw)
     ok = True
     for i, p in enumerate(prompts):
         rid = seq.submit(p, max_new_tokens=8)

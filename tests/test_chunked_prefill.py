@@ -159,14 +159,16 @@ def test_padded_mode_prism_gz_shows_the_wart():
                         max_cache=16, hp=hp, prefill_mode="padded")
     eng.submit([7, 19, 3, 42, 11, 23], max_new_tokens=1)
     eng.run()
-    gz = np.asarray(eng._cache["scan"][0]["gz"][0, 0])
+    gz = np.asarray(eng.kv_cache.storage["scan"][0]["gz"][0, 0])
     assert gz.tolist() == [8.0], gz               # pads counted: the wart
 
+    # paged=False: the gz-by-slot-row read below is dense-layout
+    # addressing (the paged prism engine pools this state per request)
     eng2 = ServingEngine(TINY, mesh, params, n_slots=2, prefill_len=8,
-                         max_cache=16, hp=hp, chunk_len=4)
+                         max_cache=16, hp=hp, chunk_len=4, paged=False)
     eng2.submit([7, 19, 3, 42, 11, 23], max_new_tokens=1)
     eng2.run()
-    gz2 = np.asarray(eng2._cache["scan"][0]["gz"][0, 0])
+    gz2 = np.asarray(eng2.kv_cache.storage["scan"][0]["gz"][0, 0])
     assert gz2.tolist() == [6.0], gz2             # real columns only
 
 

@@ -205,13 +205,17 @@ def test_packed_prism_means_pinned_against_unpadded_reference():
     hp = ServeHParams(decode_mode="prism", ssm_chunk=8, means_cr=8.0)
     prompt = [7, 19, 3, 42, 11, 23]
 
+    # paged=False: this test reads the DENSE cache leaves by slot row
+    # (the paged prism engine keeps this state in the pooled state rows;
+    # its token-level equivalence runs via tests/engine_equiv_runner.py)
     eng = ServingEngine(TINY, mesh, params, n_slots=2, prefill_len=n0,
-                        max_cache=cap, hp=hp, token_budget=4)
+                        max_cache=cap, hp=hp, token_budget=4,
+                        paged=False)
     assert eng.layout.L == 1
     eng.submit(prompt, max_new_tokens=1)
     eng.run()
     assert eng.stats.packed_ticks >= 2   # 6 prompt tokens over budget 4
-    cache = eng._cache
+    cache = eng.kv_cache.storage
 
     prism = PrismConfig(P=1, cr=8.0, mode="voltage")
     pre, _, _, _ = make_prefill_step(TINY, mesh, params, prism,
