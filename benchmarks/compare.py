@@ -19,7 +19,9 @@ Gates (exit 1 on any failure):
     token-identical to the chunked oracle (kernel-match), concatenate-
     free, and no slower than chunked on the main trace, and on the
     saturated trace must hold the PR-5 claim — logical throughput >=
-    gang with TTFT p50 <= chunked;
+    gang with TTFT p50 <= chunked; on the page-starved overload trace
+    the host offload tier must stay token-identical with preemption ON
+    vs OFF and must not worsen the interactive class's TTFT (PR-7);
   * throughput — the engine's logical-clock requests-per-kstep (packed
     and chunked, main trace) may not regress more than ``--tolerance``
     (default 20%) vs the committed baseline.  The logical clock runs
@@ -104,6 +106,21 @@ def compare(decode_base, decode_cur, engine_base, engine_cur,
     gate("engine/prefix_ttft_no_worse",
          eg.get("prefix_ttft_no_worse", False),
          "prefix-ON TTFT p50 <= OFF on the shared-prefix trace")
+
+    # -- host KV offload / preemption: structural ----------------------
+    gate("engine/preempt_token_match",
+         eg.get("preempt_token_match", False),
+         "offload ON token-identical to OFF on the page-starved "
+         "overload trace (spill/restore never corrupts)")
+    gate("engine/preempt_fired",
+         eg.get("preempt_fired", False),
+         "the overload trace actually preempted and restored through "
+         "the host store")
+    gate("engine/preempt_ttft_no_worse",
+         eg.get("preempt_ttft_no_worse", False),
+         f"interactive-class TTFT p50 with preemption <= without "
+         f"(speedup x"
+         f"{eg.get('preempt_interactive_ttft_speedup', 0.0):.2f})")
 
     # -- engine bench: logical-clock throughput vs baseline ------------
     for mode in ("packed", "chunked"):

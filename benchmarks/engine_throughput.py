@@ -16,14 +16,17 @@ differ only in admission policy:
   * gang    — classic static batching (admit into an empty pool only,
               drain completely): the head-of-line-blocking baseline
 
-Four traces: the moderate-load ``main`` trace (chat regime), the
+Five traces: the moderate-load ``main`` trace (chat regime), the
 ``short``-prompt trace (pad-to-length waste), the ``saturated`` trace
 (arrivals far above the service rate — the regime where PR-4's FLOP
 clock recorded gang flushes out-amortizing per-row chunk calls, and
-where token packing closes that gap), and the shared-``prefix`` trace
+where token packing closes that gap), the shared-``prefix`` trace
 (every prompt opens with the same system prompt; the paged engine's
 prefix cache maps the shared pages copy-on-write and must cut prefill
-work without changing a token).
+work without changing a token), and the ``overload`` trace (arrivals
+demand more KV pages than the pool holds; the host offload tier must
+cut the interactive class's TTFT by preempting background decodes —
+spill to host, restore later — without changing a token).
 
 To keep the comparison deterministic on noisy shared CPUs — and
 gateable in CI (``benchmarks/compare.py``) — the engines run on a
@@ -107,7 +110,8 @@ def prefill_flops_per_request(cfg, plens, mode: str) -> float:
     return total / max(1, len(plens))
 
 
-def build_engine(mode: str, *, prefix_cache: bool | None = None):
+def build_engine(mode: str, *, prefix_cache: bool | None = None,
+                 offload: bool = False, n_pages: int | None = None):
     import jax
     from repro.models import transformer as T
     from repro.runtime.serve import ServeHParams
@@ -125,7 +129,7 @@ def build_engine(mode: str, *, prefix_cache: bool | None = None):
         decode_per_prefill=DECODE_PER_PREFILL,
         chunk_len=CHUNK_LEN, token_budget=TOKEN_BUDGET,
         prefill_mode=prefill_mode, gang=(mode == "gang"),
-        prefix_cache=prefix_cache)
+        prefix_cache=prefix_cache, offload=offload, n_pages=n_pages)
     eng = ServingEngine(cfg, mesh, params, ecfg, clock=clock)
     return eng, clock, cfg
 
@@ -166,8 +170,35 @@ def make_prefix_trace(cfg, *, n_requests, arrival_gap, prefix_len,
     return out
 
 
+def make_overload_trace(cfg, *, seed=4):
+    """Overload trace: arrivals demand more pages than the pool holds.
+    Eight priority-0 background requests (long generations, 4-6 pages
+    each against a 14-page pool) arrive in a burst, then six priority-1
+    interactive requests (one page each) land inside the busy window.
+    Items are (arrival, prompt, gen, priority) 4-tuples: with the
+    offload tier ON a blocked interactive arrival spills the
+    lowest-priority longest-remaining decode to host memory and admits
+    immediately; OFF it queues until a background request drains."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = []
+    t = 0.0
+    for _ in range(8):
+        t += float(rng.exponential(2.0))
+        plen = int(rng.integers(12, 25))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen).tolist()
+        out.append((t, prompt, int(rng.integers(40, 61)), 0))
+    for k in range(6):
+        plen = int(rng.integers(4, 9))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen).tolist()
+        out.append((30.0 + 25.0 * k, prompt, int(rng.integers(4, 9)), 1))
+    out.sort(key=lambda item: item[0])
+    return out
+
+
 def run_trace(mode: str, trace, costs, *,
-              prefix_cache: bool | None = None) -> tuple:
+              prefix_cache: bool | None = None, offload: bool = False,
+              n_pages: int | None = None) -> tuple:
     """Drive one engine over a trace on the analytic logical clock.
     Returns (logical metrics plus measured wall ms per step kind,
     {trace index: generated token ids}) — the token lists let the
@@ -176,7 +207,8 @@ def run_trace(mode: str, trace, costs, *,
     from repro.serving import EngineStats, SamplingParams
     from .common import packed_step_flops
 
-    eng, clock, cfg = build_engine(mode, prefix_cache=prefix_cache)
+    eng, clock, cfg = build_engine(mode, prefix_cache=prefix_cache,
+                                   offload=offload, n_pages=n_pages)
     # compile warmup outside the measured window (one multi-chunk
     # prompt + one short, through eviction)
     eng.submit(list(range(1, 20)), max_new_tokens=2)
@@ -186,10 +218,12 @@ def run_trace(mode: str, trace, costs, *,
     eng.stats = EngineStats(n_slots=eng.n_slots)
 
     t0_trace = clock.t
-    for i, (arrival, prompt, gen) in enumerate(trace):
+    for i, item in enumerate(trace):
+        arrival, prompt, gen = item[0], item[1], item[2]
         eng.submit(prompt, max_new_tokens=gen,
                    sampling=SamplingParams(seed=i),
-                   arrival=t0_trace + arrival)
+                   arrival=t0_trace + arrival,
+                   priority=item[3] if len(item) > 3 else 0)
 
     cost = {"decode": costs["decode"],
             "prefill": (costs["chunk"] if mode != "padded"
@@ -222,10 +256,24 @@ def run_trace(mode: str, trace, costs, *,
     med = (lambda xs: 1e3 * float(np.median(xs)) if xs else 0.0)
     results = {rid - warmed: toks for rid, toks in eng.results().items()
                if rid >= warmed}
+    # per-priority-class TTFT: the preemption gate compares the
+    # interactive class directly, not the pooled percentile
+    by_class: dict = {}
+    for i, item in enumerate(trace):
+        pri = item[3] if len(item) > 3 else 0
+        by_class.setdefault(pri, []).append(eng._results[i + warmed].ttft)
+    ttft_by_class = {str(p): float(np.median(v))
+                     for p, v in sorted(by_class.items())}
     return {
         "requests_per_ksteps": 1e3 * len(trace) / steps,
         "ttft_p50_steps": s["ttft_p50_s"],   # logical-clock units
         "ttft_p90_steps": s["ttft_p90_s"],
+        "ttft_p99_steps": s["ttft_p99_s"],
+        "ttft_p50_by_class": ttft_by_class,
+        "preemptions": s["preemptions"],
+        "spilled_pages": s["spilled_pages"],
+        "restore_hits": s["restore_hits"],
+        "restore_misses": s["restore_misses"],
         "ttft_max_steps": s["ttft_max_s"],
         "occupancy": s["occupancy"],
         "prefills": s["prefills"],
@@ -340,6 +388,18 @@ def run_all() -> dict:
         res["prefix"][name], toks["prefix"][name] = run_trace(
             "packed", prefix_trace, costs, prefix_cache=on)
 
+    # overload (preemption) trace: identical page-starved trace with the
+    # host offload tier ON vs OFF — spill/restore must not change a
+    # token, and the interactive class's TTFT must not get worse (the
+    # whole point of preempting background work).  prefix reuse is off
+    # so page accounting is exact in both runs.
+    overload_trace = make_overload_trace(cfg, seed=4)
+    res["overload"], toks["overload"] = {}, {}
+    for name, on in (("preempt_on", True), ("preempt_off", False)):
+        res["overload"][name], toks["overload"][name] = run_trace(
+            "packed", overload_trace, costs, prefix_cache=False,
+            offload=on, n_pages=14)
+
     flops = {}
     for trace_name, trace in (("main", main_trace),
                               ("short", short_trace)):
@@ -417,6 +477,28 @@ def run_all() -> dict:
         "prefix_ttft_no_worse": (
             res["prefix"]["prefix_on"]["ttft_p50_steps"]
             <= res["prefix"]["prefix_off"]["ttft_p50_steps"] + 1e-9),
+        # ---- preemption gates ----------------------------------------
+        # spill -> host store -> restore must not change a single token
+        # vs the same page-starved trace served without preemption ...
+        "preempt_token_match": all(
+            toks["overload"]["preempt_on"][i]
+            == toks["overload"]["preempt_off"][i]
+            for i in range(len(overload_trace))),
+        # ... the overload trace must actually exercise the tier ...
+        "preempt_fired": (
+            res["overload"]["preempt_on"]["preemptions"] > 0
+            and res["overload"]["preempt_on"]["restore_hits"] > 0),
+        # ... and the interactive class (priority 1) must reach its
+        # first token no later than when it has to queue behind
+        # background decodes for free pages
+        "preempt_ttft_no_worse": (
+            res["overload"]["preempt_on"]["ttft_p50_by_class"]["1"]
+            <= res["overload"]["preempt_off"]["ttft_p50_by_class"]["1"]
+            + 1e-9),
+        "preempt_interactive_ttft_speedup": (
+            res["overload"]["preempt_off"]["ttft_p50_by_class"]["1"]
+            / max(res["overload"]["preempt_on"]["ttft_p50_by_class"]["1"],
+                  1e-9)),
     }
     return {
         "bench": "engine_throughput",
@@ -469,14 +551,28 @@ def main(report):
                f"saved {s['prefix_tokens_saved']})")
         report(f"engine/prefix/{name}/prefill_mflops_per_req", 0.0,
                f"{flops['prefix_' + name] / 1e6:.2f}")
+    for name in ("preempt_on", "preempt_off"):
+        s = res["overload"][name]
+        report(f"engine/overload/{name}/requests_per_ksteps", 0.0,
+               f"{s['requests_per_ksteps']:.1f}")
+        report(f"engine/overload/{name}/ttft_p50_steps", 0.0,
+               f"{s['ttft_p50_steps']:.1f} (p99 {s['ttft_p99_steps']:.1f})")
+        report(f"engine/overload/{name}/interactive_ttft_p50", 0.0,
+               f"{s['ttft_p50_by_class'].get('1', 0.0):.1f}")
+        report(f"engine/overload/{name}/preemptions", 0.0,
+               f"{s['preemptions']} (spilled {s['spilled_pages']} pages, "
+               f"{s['restore_hits']} restores)")
     g = payload["gates"]
     for gate in ("short_prefill_flops_lower", "short_ttft_no_worse",
                  "chunked_vs_padded_ttft_no_worse", "packed_token_match",
                  "packed_concat_free", "packed_vs_chunked_no_regression",
                  "packed_vs_gang_saturated",
                  "packed_ttft_no_worse_saturated", "prefix_token_match",
-                 "prefix_ttft_no_worse"):
+                 "prefix_ttft_no_worse", "preempt_token_match",
+                 "preempt_fired", "preempt_ttft_no_worse"):
         report(f"engine/gate/{gate}", 0.0, str(g[gate]))
+    report("engine/preempt_interactive_ttft_speedup", 0.0,
+           f"x{g['preempt_interactive_ttft_speedup']:.2f}")
     report("engine/prefix_reuse_savings", 0.0,
            f"{100 * g['prefix_reuse_savings']:.1f}% of prefill tokens "
            f"({g['prefix_hits']} hits)")
@@ -515,5 +611,7 @@ if __name__ == "__main__":
             and g["packed_vs_gang_saturated"]
             and g["packed_ttft_no_worse_saturated"]
             and g["prefix_token_match"] and g["prefix_ttft_no_worse"]
-            and g["prefix_reuse_savings"] > 0):
+            and g["prefix_reuse_savings"] > 0
+            and g["preempt_token_match"] and g["preempt_fired"]
+            and g["preempt_ttft_no_worse"]):
         sys.exit(1)

@@ -72,6 +72,14 @@ def main():
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="[engine, paged] disable shared-prefix COW "
                          "reuse (on by default in exact decode mode)")
+    ap.add_argument("--offload", action="store_true",
+                    help="[engine, paged] host KV offload tier: blocked "
+                         "higher-priority arrivals preempt lower-priority "
+                         "work (spill to host memory, restore on resume)")
+    ap.add_argument("--priority", type=int, default=1, metavar="CLASSES",
+                    help="[engine] priority classes in the synthetic "
+                         "trace — each request draws uniform [0, CLASSES)"
+                         " (higher = more urgent; 1 = plain FIFO)")
     args = ap.parse_args()
 
     import jax
@@ -114,7 +122,8 @@ def main():
             token_budget=args.token_budget,
             paged=not args.no_paged, page_tokens=args.page_tokens,
             n_pages=args.n_pages,
-            prefix_cache=False if args.no_prefix_cache else None)
+            prefix_cache=False if args.no_prefix_cache else None,
+            offload=args.offload)
         eng = ServingEngine(cfg, mesh, params, ecfg)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
@@ -125,10 +134,15 @@ def main():
             eng.submit(prompt, max_new_tokens=args.gen,
                        sampling=SamplingParams(temperature=args.temperature,
                                                top_k=args.top_k, seed=i),
-                       arrival=float(arrivals[i]))
+                       arrival=float(arrivals[i]),
+                       priority=int(rng.integers(0, max(1, args.priority))))
         mode = "gang (static)" if args.gang else "continuous"
+        extras = (f", {args.priority} priority classes"
+                  if args.priority > 1 else "")
+        extras += ", host offload" if args.offload else ""
         print(f"[engine] {args.requests} requests, Poisson rate "
-              f"{args.rate}/s, {args.batch} slots, {mode} admission")
+              f"{args.rate}/s, {args.batch} slots, {mode} admission"
+              f"{extras}")
         eng.run()
         for k, v in eng.stats.summary().items():
             print(f"[engine] {k:22s} {v:.3f}"

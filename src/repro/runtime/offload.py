@@ -1,0 +1,130 @@
+"""Host-memory KV offload tier.
+
+A :class:`KVStore` holds the spilled cache footprint of preempted (or
+suspended) requests: the raw content of every device page a slot held,
+plus — in prism mode — the request's Segment-Means state row
+(``kz/vz/gz/zsum``).  Spilling is ONE device→host gather per request
+(``KVCache.spill``); restoring re-enters through the normal page-aware
+admission path (``plan_restore`` → ``reserve`` → ``bind`` →
+``KVCache.restore``), so a restore is just an admit whose covered-token
+count comes from the store instead of the prefix cache.
+
+The store is a plain LRU keyed by request id.  Capacity is optional and
+byte-denominated; when the payload is host-less (``KVCache`` built with
+``storage=None``, as the scheduler-level tests do) the page count stands
+in for bytes.  Entries that do not fit are *dropped* — callers must
+treat a missing entry as host-memory pressure and fall back to
+re-prefill (see ``ServingEngine._restore_gate``), never as an error that
+can corrupt a neighbour slot.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any
+
+
+def _tree_bytes(payload) -> int:
+    """Total host bytes of a device_get'd pytree of numpy arrays."""
+    import jax
+
+    return int(sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(payload)))
+
+
+@dataclass
+class SpilledEntry:
+    """One preempted request's cache footprint, resident on the host.
+
+    ``payload`` mirrors the cache storage structure ({"scan": [...],
+    "tail": [...]}) but holds only this request's slice: its pages
+    gathered along the page axis and, in prism mode, its state row.
+    ``payload is None`` in host-only bookkeeping mode (no device
+    storage attached to the KVCache).
+    """
+
+    key: Any
+    n_pages: int
+    tokens: int            # covered-token count for the restore plan
+    payload: Any
+    nbytes: int
+
+
+class KVStore:
+    """LRU host store for spilled KV pages + prism state.
+
+    ``capacity_bytes=None`` means unbounded.  ``capacity_bytes=0`` drops
+    every put — the fault-injection configuration the restore-failure
+    tests use to simulate total host-memory pressure.
+    """
+
+    def __init__(self, capacity_bytes: int | None = None):
+        self.capacity_bytes = capacity_bytes
+        self._entries: OrderedDict[Any, SpilledEntry] = OrderedDict()
+        self.bytes_used = 0
+        self.puts = 0
+        self.drops = 0          # puts rejected (entry > capacity)
+        self.evictions = 0      # LRU entries pushed out by later puts
+        self.hits = 0           # pops that found their entry
+        self.misses = 0         # pops/peeks that did not
+
+    # -- write side ----------------------------------------------------
+    def put(self, key, n_pages: int, payload, *, tokens: int = 0) -> bool:
+        """Store a spilled entry; returns False when it was dropped."""
+        nbytes = _tree_bytes(payload) if payload is not None else int(n_pages)
+        if key in self._entries:
+            self.drop(key)
+        self.puts += 1
+        if self.capacity_bytes is not None and nbytes > self.capacity_bytes:
+            self.drops += 1
+            return False
+        self._entries[key] = SpilledEntry(key=key, n_pages=int(n_pages),
+                                          tokens=int(tokens),
+                                          payload=payload, nbytes=nbytes)
+        self.bytes_used += nbytes
+        while (self.capacity_bytes is not None
+               and self.bytes_used > self.capacity_bytes):
+            _, old = self._entries.popitem(last=False)   # LRU first
+            self.bytes_used -= old.nbytes
+            self.evictions += 1
+        return True
+
+    # -- read side -----------------------------------------------------
+    def peek(self, key) -> SpilledEntry | None:
+        """Look up without removing (used by ``plan_restore``)."""
+        ent = self._entries.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        return ent
+
+    def pop(self, key) -> SpilledEntry | None:
+        """Remove and return the entry, or None if it was lost."""
+        ent = self._entries.pop(key, None)
+        if ent is None:
+            self.misses += 1
+            return None
+        self.bytes_used -= ent.nbytes
+        self.hits += 1
+        return ent
+
+    def drop(self, key) -> None:
+        """Silently discard an entry (cancelled request, fault inject)."""
+        ent = self._entries.pop(key, None)
+        if ent is not None:
+            self.bytes_used -= ent.nbytes
+
+    # -- introspection -------------------------------------------------
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries),
+                "bytes_used": self.bytes_used,
+                "capacity_bytes": self.capacity_bytes,
+                "puts": self.puts, "drops": self.drops,
+                "evictions": self.evictions,
+                "hits": self.hits, "misses": self.misses}

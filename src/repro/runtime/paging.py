@@ -524,6 +524,58 @@ class KVCache:
         self.table.free(pages)
         self._state_free.append(self.slot_state.pop(slot))
 
+    # -- host offload tier (spill / restore) -------------------------------
+    def spill(self, key, slot: int, store, *, tokens: int = 0) -> int:
+        """Spill ``slot``'s entire cache footprint to the host ``store``
+        under ``key`` (the request id): ONE device→host gather of every
+        page the slot holds plus — in prism mode — its kz/vz/gz/zsum
+        state row, then the refcount handoff: the pages go back to the
+        table (COW-shared prefix pages just decref; their content was
+        gathered, so the restored copy is private and bit-identical),
+        the state row returns to the pool, and the request's only live
+        copy is the host entry.  ``tokens`` records the covered-token
+        count ``plan_restore`` will report.  Returns pages spilled."""
+        pages = self.slot_pages.pop(slot)
+        srow = self.slot_state.pop(slot)
+        payload = (self._extract(pages, srow)
+                   if self.storage is not None else None)
+        store.put(key, len(pages), payload, tokens=tokens)
+        self.table.free(pages)
+        self._state_free.append(srow)
+        return len(pages)
+
+    def plan_restore(self, key, store) -> AdmitPlan | None:
+        """Admission plan for restoring a spilled request — the same
+        shape ``plan`` returns, but the covered-token count comes from
+        the store instead of the prefix cache and every page is fresh
+        (content arrives by injection, not sharing).  Returns None when
+        the store lost the entry (host-memory pressure): the caller
+        must fall back to a plain re-prefill plan."""
+        ent = store.peek(key)
+        if ent is None:
+            return None
+        return AdmitPlan(total_pages=ent.n_pages, fresh_pages=ent.n_pages,
+                         covered=ent.tokens)
+
+    def restore(self, key, slot: int, store) -> bool:
+        """Inject the spilled content for ``key`` into the fresh pages
+        just bound to ``slot`` (``plan_restore`` → ``reserve`` →
+        ``bind`` must have run).  Pages are physically different from
+        the ones spilled; the page/state maps make relocation invisible
+        to the step programs, so decode resumes bit-equal in both
+        cache modes.  Returns False when the store dropped the entry
+        between planning and binding — the pages stay bound (the
+        restore plan is never smaller than a re-prefill plan for the
+        same request), so the caller just re-prefills into them."""
+        ent = store.pop(key)
+        if ent is None:
+            return False
+        pages = self.slot_pages[slot]
+        assert len(pages) == ent.n_pages, (len(pages), ent.n_pages)
+        if self.storage is not None and ent.payload is not None:
+            self._inject(pages, self.slot_state[slot], ent.payload)
+        return True
+
     # -- device-side maps --------------------------------------------------
     def page_map(self, n_slots: int) -> np.ndarray:
         """(n_slots, pages_per_row) int32 physical-page map fed to the
@@ -591,6 +643,64 @@ class KVCache:
         prog = self._jit("copy_state", body)
         self.storage = prog(self.storage, jnp.asarray(src_row, jnp.int32),
                             jnp.asarray(dst_row, jnp.int32))
+
+    def _extract(self, pages, srow: int):
+        """Gather one request's pages (+ state row) off the device in a
+        single jitted gather + ONE ``device_get`` — the spill path.
+        The result is a host pytree mirroring the storage structure but
+        holding only this request's slice."""
+        import jax.numpy as jnp
+
+        key = ("extract", len(pages))
+        if key not in self._jit_cache:
+            def body(storage, idx, sr):
+                def one(tree, axis):
+                    out = {}
+                    for k, v in tree.items():
+                        if k in ("k", "v"):
+                            out[k] = jnp.take(v, idx, axis=axis)
+                        elif k in ("kz", "vz", "gz", "zsum"):
+                            out[k] = lax.dynamic_slice_in_dim(
+                                v, sr, 1, axis=axis)
+                    return out
+                return {"scan": [one(t, 1) for t in storage["scan"]],
+                        "tail": [one(t, 0) for t in storage["tail"]]}
+            self._jit_cache[key] = jax.jit(body)
+        out = self._jit_cache[key](self.storage,
+                                   jnp.asarray(pages, jnp.int32),
+                                   jnp.asarray(srow, jnp.int32))
+        return jax.device_get(out)
+
+    def _inject(self, pages, srow: int, payload) -> None:
+        """Scatter a spilled payload back into (new) physical pages and
+        a (new) state row — the restore path, exact inverse of
+        ``_extract`` up to page relocation."""
+        import jax.numpy as jnp
+
+        key = ("inject", len(pages))
+        if key not in self._jit_cache:
+            def body(storage, pl, idx, sr):
+                def one(tree, p, axis):
+                    out = {}
+                    for k, v in tree.items():
+                        if k in ("k", "v"):
+                            data = p[k].astype(v.dtype)
+                            v = (v.at[idx].set(data) if axis == 0
+                                 else v.at[:, idx].set(data))
+                        elif k in ("kz", "vz", "gz", "zsum"):
+                            v = lax.dynamic_update_slice_in_dim(
+                                v, p[k].astype(v.dtype), sr, axis=axis)
+                        out[k] = v
+                    return out
+                return {"scan": [one(t, p, 1) for t, p in
+                                 zip(storage["scan"], pl["scan"])],
+                        "tail": [one(t, p, 0) for t, p in
+                                 zip(storage["tail"], pl["tail"])]}
+            self._jit_cache[key] = jax.jit(
+                body, donate_argnums=(0,), out_shardings=self.sharding)
+        self.storage = self._jit_cache[key](self.storage, payload,
+                                            jnp.asarray(pages, jnp.int32),
+                                            jnp.asarray(srow, jnp.int32))
 
     # -- dense-rowset lifecycle (legacy oracle path) -----------------------
     def grow_from(self, prefill_cache, lay_from):

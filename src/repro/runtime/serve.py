@@ -397,6 +397,20 @@ def make_kv_cache(cfg: ModelConfig, mesh, lay: ServeLayout, batch: int,
     return kv
 
 
+def make_kv_store(capacity_bytes: int | None = None):
+    """Host offload tier companion to ``make_kv_cache``: an LRU
+    ``KVStore`` for spilled requests.  ``KVCache.spill`` gathers a
+    slot's pages (+ prism kz/vz/gz/zsum state row) device→host in one
+    jitted gather and hands the refcounts back to the page table;
+    ``KVCache.plan_restore`` re-enters the normal ``plan`` → ``reserve``
+    → ``bind`` admission path with the covered-token count taken from
+    the store, and ``KVCache.restore`` injects the payload into the
+    freshly bound pages — decode then resumes bit-identically in both
+    decode modes (page/state maps hide the physical relocation)."""
+    from .offload import KVStore
+    return KVStore(capacity_bytes=capacity_bytes)
+
+
 # --------------------------------------------------------------------------
 # decode attention
 # --------------------------------------------------------------------------

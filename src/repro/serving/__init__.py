@@ -1,9 +1,10 @@
 """Request-level serving: continuous batching over the sequence-sharded
 decode runtime (docs/serving.md)."""
+from ..runtime.offload import KVStore, SpilledEntry
 from .sampling import SamplingParams, sample_token
 from .scheduler import Request, RequestState, FifoScheduler, EngineStats
 from .engine import EngineConfig, ServingEngine
 
 __all__ = ["SamplingParams", "sample_token", "Request", "RequestState",
            "FifoScheduler", "EngineStats", "EngineConfig",
-           "ServingEngine"]
+           "ServingEngine", "KVStore", "SpilledEntry"]

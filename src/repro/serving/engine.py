@@ -65,13 +65,14 @@ import numpy as np
 
 from ..core.protocol import PrismConfig
 from ..models.config import ModelConfig
+from ..runtime.offload import KVStore
 from ..runtime.paging import make_paged_layout
 from ..runtime.serve import (ServeHParams, _paged_placement, make_layout,
                              make_chunk_prefill_step, make_kv_cache,
                              make_packed_step, make_prefill_step,
                              make_serve_step, seq_shards)
 from .sampling import SamplingParams, sample_token
-from .scheduler import EngineStats, FifoScheduler, Request
+from .scheduler import EngineStats, FifoScheduler, Request, RequestState
 
 
 @dataclass(frozen=True)
@@ -105,6 +106,8 @@ class EngineConfig:
     page_tokens: int | None = None     # page size in token positions
     n_pages: int | None = None         # pool size (default: slot parity)
     prefix_cache: bool | None = None   # shared-prefix COW reuse
+    offload: bool = False              # host KVStore tier + preemption
+    offload_bytes: int | None = None   # store capacity (None = unbounded)
 
     def __post_init__(self):
         if self.prefill_mode not in ("packed", "chunked", "padded"):
@@ -136,6 +139,17 @@ class EngineConfig:
                 "prefix_cache requires the paged cache in exact decode "
                 f"mode (paged={self.paged}, "
                 f"decode_mode={self.hp.decode_mode!r})")
+        if self.offload:
+            if not self.paged:
+                raise ValueError(
+                    "offload requires the paged cache "
+                    f"(paged={self.paged}, prefill_mode="
+                    f"{self.prefill_mode!r}): spill/restore moves pages, "
+                    "not dense rows")
+            if self.gang:
+                raise ValueError(
+                    "offload/preemption is incompatible with gang "
+                    "(static batching) admission")
         if self.prism is None:
             set_("prism", PrismConfig(
                 P=1, cr=self.hp.means_cr,
@@ -237,6 +251,12 @@ class ServingEngine:
         self._plans: dict = {}         # rid -> reserved AdmitPlan
         self._next_rid = 0
         self._t0 = None                # clock origin (first submit/run)
+        # host offload tier: spilled KV pages + prism state, keyed by
+        # rid.  Tests may swap in a capacity-limited / faulty store.
+        self._store = (KVStore(capacity_bytes=config.offload_bytes)
+                       if config.offload else None)
+        self._suspended: dict = {}     # rid -> parked RequestState
+        self._from_store: set = set()  # rids whose reservation restores
 
     @staticmethod
     def _derive_paging(base, config: EngineConfig):
@@ -259,6 +279,11 @@ class ServingEngine:
         """The engine's ``KVCache`` (page table, prefix cache, device
         storage) — exposed for tests, stats, and offload tiers."""
         return self._kv
+
+    @property
+    def kv_store(self):
+        """The host offload tier (None unless ``offload=True``)."""
+        return self._store
 
     # ------------------------------------------------------------------
     # compiled-program cache
@@ -316,11 +341,13 @@ class ServingEngine:
 
     def submit(self, prompt, *, max_new_tokens: int, eos_id=None,
                sampling: SamplingParams = SamplingParams(),
-               arrival: float | None = None) -> int:
+               arrival: float | None = None, priority: int = 0) -> int:
         """Queue one request.  ``arrival`` (engine-relative seconds) may
         lie in the future — the run loop holds the request back until
         the clock passes it, which is how Poisson traces are replayed.
-        """
+        ``priority`` (higher = more urgent) picks the admission class;
+        with ``offload=True`` a blocked higher-priority arrival preempts
+        lower-priority work into the host KV store."""
         prompt = tuple(int(t) for t in prompt)
         if not 1 <= len(prompt) <= self.prefill_len:
             raise ValueError(
@@ -333,7 +360,8 @@ class ServingEngine:
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
                       eos_id=eos_id, sampling=sampling,
-                      arrival=self.now() if arrival is None else arrival)
+                      arrival=self.now() if arrival is None else arrival,
+                      priority=priority)
         # always route through the arrival-ordered pending heap so a
         # late submit with an already-past arrival cannot jump ahead of
         # earlier arrivals still waiting to be released (FIFO by
@@ -373,13 +401,11 @@ class ServingEngine:
             if sch.want_prefill():
                 return self._padded_flush()
         elif self.prefill_mode == "chunked":
-            if sch.want_admit():
-                self._admit()              # host-side: slots + pages
+            self._admit_or_preempt()       # host-side: slots + pages
             if sch.want_chunk():
                 return self._chunk_step()
         else:                              # packed: one program per tick
-            if sch.want_admit():
-                self._admit()              # host-side: slots + pages
+            self._admit_or_preempt()       # host-side: slots + pages
             if any(st.prefilling for st in sch.active.values()):
                 return self._packed_tick()
 
@@ -446,23 +472,168 @@ class ServingEngine:
         self._plans[req.rid] = plan
         return True
 
+    def _restore_gate(self, st: RequestState) -> bool:
+        """Admission check for a preempted request coming back from the
+        host store: the plan's page count (and covered-token count)
+        comes from the spilled entry instead of the prefix cache.  When
+        the store LOST the entry (host-memory pressure / fault
+        injection) the recovery is per-request and clean: reset the
+        state for a full re-prefill and fall through to the ordinary
+        fresh-admission gate — greedy/seeded sampling makes the rerun
+        deterministic, and no other slot is touched."""
+        kv, rid = self._kv, st.req.rid
+        plan = kv.plan_restore(rid, self._store)
+        if plan is None:
+            st.reset_for_refill()
+            self.stats.restore_misses += 1
+            return self._admit_gate(st.req)
+        if not kv.can_admit(plan, reclaim=False):
+            if kv.prefix is not None:
+                kv.prefix.reclaim(plan.fresh_pages)
+            if not kv.can_admit(plan, reclaim=False):
+                self.stats.out_of_pages += 1
+                return False
+        if not kv.reserve(rid, plan):
+            self.stats.out_of_pages += 1
+            return False
+        self._plans[rid] = plan
+        self._from_store.add(rid)
+        return True
+
+    def _gate(self, cand) -> bool:
+        """Dispatch the page-aware admission gate on the candidate
+        kind: fresh Request vs RequestState resuming from the store."""
+        if isinstance(cand, RequestState):
+            return self._restore_gate(cand)
+        return self._admit_gate(cand)
+
     def _admit(self) -> list:
         """Assign free slots to queued requests; in paged mode each
-        admission binds its reserved pages to the slot and a prefix hit
-        fast-forwards the prompt past the tokens its shared pages
-        already hold."""
+        admission binds its reserved pages to the slot, then either a
+        prefix hit fast-forwards the prompt past the tokens its shared
+        pages already hold, or — for a resume — the spilled content is
+        injected back into the freshly bound pages."""
         states = self._sched.admit(
-            self.now(), gate=self._admit_gate if self._paged else None)
+            self.now(), gate=self._gate if self._paged else None)
         for st in states:
             if not self._paged:
                 continue
-            self._kv.bind(st.req.rid, st.slot)
-            plan = self._plans.pop(st.req.rid)
-            if plan.covered:
+            rid = st.req.rid
+            self._kv.bind(rid, st.slot)
+            plan = self._plans.pop(rid)
+            if rid in self._from_store:
+                self._from_store.discard(rid)
+                if self._kv.restore(rid, st.slot, self._store):
+                    self.stats.restore_hits += 1
+                else:
+                    # entry evicted between plan and bind: the bound
+                    # pages are large enough for a full re-prefill
+                    st.reset_for_refill()
+                    self.stats.restore_misses += 1
+            elif plan.covered:
                 st.nprefilled = plan.covered
                 self.stats.prefix_hits += 1
                 self.stats.prefix_tokens_saved += plan.covered
         return states
+
+    def _admit_or_preempt(self) -> None:
+        """The tick loop's admission move: admit what fits, then — with
+        the offload tier on — spill strictly-lower-priority active work
+        whenever the head admission candidate is still blocked (no free
+        slot, or ``out_of_pages``).  Each spill is one device→host
+        gather; the victim's RequestState parks on the scheduler's
+        resume queue and restores through the normal admission path
+        once pressure clears.  Equal-priority arrivals never preempt —
+        the pool drains by itself and swapping would only thrash."""
+        sch = self._sched
+        if sch.want_admit():
+            self._admit()
+        if self._store is None:
+            return
+        while True:
+            cand = sch.peek_admit()
+            if cand is None:
+                return
+            prio = (cand.req.priority if isinstance(cand, RequestState)
+                    else cand.priority)
+            victim = sch.pick_victim(prio)
+            if victim is None:
+                return
+            self._spill(victim)
+            self._admit()
+
+    def _spill(self, st: RequestState, *, requeue: bool = True) -> None:
+        """Preempt an active request: gather its pages (+ prism state
+        row) into the host store, free the device footprint, and either
+        park it for automatic resume or hand it to the caller
+        (suspend)."""
+        n = self._kv.spill(st.req.rid, st.slot, self._store,
+                           tokens=st.nprefilled)
+        self.stats.preemptions += 1
+        self.stats.spilled_pages += n
+        if requeue:
+            self._sched.preempt(st)
+        else:
+            self._sched.remove(st)
+
+    def _find_active(self, rid: int) -> RequestState | None:
+        for st in self._sched.active.values():
+            if st.req.rid == rid:
+                return st
+        return None
+
+    # -- public offload controls ---------------------------------------
+    def preempt(self, rid: int) -> bool:
+        """Force-preempt an active request into the host store; it
+        requeues for automatic restore (fair resume ordering).  The
+        tick loop preempts on priority pressure by itself — this hook
+        exists for tests, draining, and external policies."""
+        st = self._find_active(rid)
+        if st is None or self._store is None:
+            return False
+        self._spill(st, requeue=True)
+        return True
+
+    def suspend(self, rid: int) -> bool:
+        """Evict an idle multi-turn session to the host tier.  The
+        request keeps its KV in the store but does NOT requeue — it
+        consumes no slot, no pages, and no scheduler attention until
+        ``resume(rid)``.  ``run()`` does not wait for suspended
+        requests."""
+        st = self._find_active(rid)
+        if st is None or self._store is None:
+            return False
+        self._spill(st, requeue=False)
+        self._suspended[rid] = st
+        return True
+
+    def resume(self, rid: int) -> bool:
+        """Requeue a suspended session; its cache restores through the
+        normal admission path on the next tick with free capacity."""
+        st = self._suspended.pop(rid, None)
+        if st is None:
+            return False
+        self._sched.push_resume(st)
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a request that is not in a slot: pending (future
+        arrival), queued, parked for resume, or suspended.  Frees its
+        store entry if one exists.  Active requests cannot be cancelled
+        mid-flight (ROADMAP item 3)."""
+        for i, (_, r, req) in enumerate(self._pending):
+            if r == rid:
+                self._pending.pop(i)
+                heapq.heapify(self._pending)
+                return True
+        if self._sched.cancel(rid) is not None:
+            if self._store is not None:
+                self._store.drop(rid)
+            return True
+        if self._suspended.pop(rid, None) is not None:
+            self._store.drop(rid)
+            return True
+        return False
 
     def _advance_decode(self, st, logits_row, now):
         """Sample one token for a decode-phase request and advance /

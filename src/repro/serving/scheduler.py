@@ -30,6 +30,20 @@ The legacy ``padded`` engine mode still uses the all-or-nothing policy
 ``gang=True`` degrades admission to classic *static batching* — admit
 only into an empty pool, then drain it completely — which is the
 baseline the engine-throughput benchmark compares against.
+
+**Priority classes and preemption** (PR 7): every request carries an
+integer ``priority`` (higher = more urgent; default 0 keeps the
+scheduler exactly FIFO).  Admission serves the highest non-empty class
+first; within a class, *resume* candidates (requests preempted earlier,
+ordered by original arrival) go before fresh ones, and fresh ones stay
+FIFO.  ``pick_victim`` implements the preempt policy: when a
+higher-priority candidate would otherwise block (no slot, or
+``out_of_pages``), the engine spills the lowest-priority
+longest-remaining active request to the host KV store
+(``runtime/offload.py``) and parks its RequestState on the resume
+queue.  A preempted request keeps its RequestState — generated tokens,
+decode position, and sampler RNG survive, so a restore continues
+bit-identically.
 """
 from __future__ import annotations
 
@@ -49,6 +63,7 @@ class Request:
     eos_id: int | None = None
     sampling: SamplingParams = SamplingParams()
     arrival: float = 0.0             # absolute clock time of arrival
+    priority: int = 0                # higher = more urgent; 0 = default
 
 
 class RequestState:
@@ -66,7 +81,8 @@ class RequestState:
     invisible (``col_pos <= pos``) until real decoded tokens land there.
     """
     __slots__ = ("req", "slot", "pos", "next_token", "nprefilled",
-                 "generated", "rng", "t_admit", "ttft", "t_finish")
+                 "generated", "rng", "t_admit", "ttft", "t_finish",
+                 "restarts")
 
     def __init__(self, req: Request, slot: int, t_admit: float):
         self.req = req
@@ -79,10 +95,32 @@ class RequestState:
         self.t_admit = t_admit
         self.ttft = None
         self.t_finish = None
+        self.restarts = 0              # re-prefills after a lost restore
 
     @property
     def prefilling(self) -> bool:
         return self.nprefilled < len(self.req.prompt)
+
+    @property
+    def remaining(self) -> int:
+        """Tokens of work left (prompt still to prefill + tokens still
+        to generate) — the preempt policy's tie-breaker."""
+        return ((len(self.req.prompt) - self.nprefilled)
+                + (self.req.max_new_tokens - len(self.generated)))
+
+    def reset_for_refill(self):
+        """Restart from scratch after the offload store lost this
+        request's spilled KV (host-memory pressure): clean per-request
+        recovery — re-prefill the prompt, regenerate from a fresh
+        sampler RNG (greedy/seeded sampling makes the rerun
+        deterministic).  ``ttft`` is NOT cleared: time-to-FIRST-token
+        was already observed and must not be double-counted."""
+        self.pos = -1
+        self.next_token = None
+        self.nprefilled = 0
+        self.generated = []
+        self.rng = self.req.sampling.make_rng()
+        self.restarts += 1
 
     def begin_decode(self):
         """Prefill done — rewind to the last prompt token and decode."""
@@ -129,6 +167,10 @@ class EngineStats:
     out_of_pages: int = 0              # admissions blocked on the free list
     prefix_hits: int = 0               # admissions that mapped a prefix
     prefix_tokens_saved: int = 0       # prompt tokens never prefilled
+    preemptions: int = 0               # spills to the host KV store
+    spilled_pages: int = 0             # pages gathered device -> host
+    restore_hits: int = 0              # resumes injected from the store
+    restore_misses: int = 0            # resumes re-prefilled (entry lost)
     t_start: float | None = None
     t_end: float | None = None
 
@@ -146,6 +188,7 @@ class EngineStats:
                                     if span else 0.0),
             "ttft_p50_s": pct(self.ttft, 50),
             "ttft_p90_s": pct(self.ttft, 90),
+            "ttft_p99_s": pct(self.ttft, 99),
             "ttft_max_s": max(self.ttft) if self.ttft else 0.0,
             "step_ms_p50": 1e3 * pct(self.step_latency, 50),
             "occupancy": (float(np.mean(self.occupancy))
@@ -162,11 +205,20 @@ class EngineStats:
             "out_of_pages": self.out_of_pages,
             "prefix_hits": self.prefix_hits,
             "prefix_tokens_saved": self.prefix_tokens_saved,
+            "preemptions": self.preemptions,
+            "spilled_pages": self.spilled_pages,
+            "restore_hits": self.restore_hits,
+            "restore_misses": self.restore_misses,
         }
 
 
 class FifoScheduler:
-    """FIFO queue + slot pool + prefill/decode interleave policy."""
+    """FIFO-within-priority queue + slot pool + interleave policy.
+
+    With every request at the default priority 0 and no preemption this
+    is exactly the original FIFO scheduler (same admission order, same
+    interleave bounds).  Priorities add per-class queues; preemption
+    adds per-class *resume* queues of parked RequestStates."""
 
     def __init__(self, n_slots: int, *, decode_per_prefill: int = 4,
                  gang: bool = False):
@@ -174,7 +226,8 @@ class FifoScheduler:
         self.n_slots = n_slots
         self.decode_per_prefill = max(1, decode_per_prefill)
         self.gang = gang
-        self.queue: deque = deque()
+        self.queues: dict = {}         # priority -> deque[Request], FIFO
+        self.resume: dict = {}         # priority -> [RequestState] by arrival
         self.free_slots: list = list(range(n_slots))   # ascending order
         self.active: dict = {}                         # slot -> RequestState
         self.drain = False     # no more arrivals expected (gang flushes)
@@ -182,11 +235,17 @@ class FifoScheduler:
 
     # -- queue -------------------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        self.queues.setdefault(req.priority, deque()).append(req)
+
+    @property
+    def queued(self) -> int:
+        """Pending admissions: fresh requests + parked preemptees."""
+        return (sum(len(q) for q in self.queues.values())
+                + sum(len(q) for q in self.resume.values()))
 
     @property
     def has_work(self) -> bool:
-        return bool(self.queue or self.active)
+        return bool(self.queued or self.active)
 
     # -- views -------------------------------------------------------------
     def prefilling(self) -> list:
@@ -203,14 +262,14 @@ class FifoScheduler:
     def _gang_ready(self) -> bool:
         """Static batching admits only a full gang into an EMPTY pool
         (or the drain-time remainder once no more arrivals come)."""
-        return not self.active and (len(self.queue) >= self.n_slots
+        return not self.active and (self.queued >= self.n_slots
                                     or self.drain)
 
     def want_admit(self) -> bool:
         """Chunked mode: admission is host-side bookkeeping (assign a
         slot, start chunking under the interleave policy), so it is
         never rate-limited — except in gang mode."""
-        if not self.queue or not self.free_slots:
+        if not self.queued or not self.free_slots:
             return False
         return self._gang_ready() if self.gang else True
 
@@ -252,7 +311,7 @@ class FifoScheduler:
     def want_prefill(self) -> bool:
         """Legacy padded mode: admit + full pad-to-length flush as one
         all-or-nothing step, same interleave bound."""
-        if not self.queue or not self.free_slots:
+        if not self.queued or not self.free_slots:
             return False
         if self.gang:
             return self._gang_ready()
@@ -266,23 +325,63 @@ class FifoScheduler:
     def note_chunk(self):
         self._decodes_since_prefill = 0
 
+    # -- admission order ---------------------------------------------------
+    def peek_admit(self):
+        """Next admission candidate without popping it: highest
+        non-empty priority class first; within a class, resume
+        candidates (parked RequestStates, ordered by original arrival —
+        they already hold progress, evicting them forever would starve
+        them) before fresh Requests, each FIFO.  Returns a Request, a
+        RequestState, or None."""
+        for prio in sorted(set(self.resume) | set(self.queues),
+                           reverse=True):
+            if self.resume.get(prio):
+                return self.resume[prio][0]
+            if self.queues.get(prio):
+                return self.queues[prio][0]
+        return None
+
+    def _pop_head(self, cand) -> None:
+        """Remove the candidate ``peek_admit`` just returned."""
+        if isinstance(cand, RequestState):
+            q = self.resume[cand.req.priority]
+            assert q[0] is cand
+            q.pop(0)
+        else:
+            q = self.queues[cand.priority]
+            assert q[0] is cand
+            q.popleft()
+
     # -- transitions -------------------------------------------------------
     def admit(self, now: float, gate=None) -> list:
-        """Pop FIFO requests into free slots (lowest slot first) and
-        return the new RequestStates, in admission order.
+        """Pop admission candidates into free slots (lowest slot first)
+        and return the admitted RequestStates, in admission order.
+        Candidate order is ``peek_admit``'s: priority classes high to
+        low, resumes before fresh, FIFO within each.
 
-        ``gate(request) -> bool`` is the page-aware admission check: it
-        is consulted on the queue HEAD before the pop, and a False stops
-        admission for this call (strict FIFO — later, smaller requests
-        never jump an out-of-pages head; the engine retries next tick
-        once eviction or prefix reclaim refills the free list).  A True
-        gate may reserve resources, so the pop must follow it."""
+        ``gate(candidate) -> bool`` is the page-aware admission check:
+        it is consulted on the head candidate before the pop, and a
+        False stops admission for this call (strict order — later,
+        smaller requests never jump an out-of-pages head; the engine
+        retries next tick once eviction, prefix reclaim, or preemption
+        refills the free list).  A True gate may reserve resources, so
+        the pop must follow it.  The candidate is a Request (fresh) or
+        a RequestState (resume from the offload store); a resumed state
+        keeps its progress and is re-bound to the new slot."""
         states = []
-        while self.queue and self.free_slots:
-            if gate is not None and not gate(self.queue[0]):
+        while self.free_slots:
+            cand = self.peek_admit()
+            if cand is None:
                 break
+            if gate is not None and not gate(cand):
+                break
+            self._pop_head(cand)
             slot = self.free_slots.pop(0)
-            st = RequestState(self.queue.popleft(), slot, now)
+            if isinstance(cand, RequestState):
+                st = cand
+                st.slot = slot
+            else:
+                st = RequestState(cand, slot, now)
             self.active[slot] = st
             states.append(st)
         if states:
@@ -296,3 +395,65 @@ class FifoScheduler:
         st.t_finish = now
         self.free_slots.append(st.slot)
         self.free_slots.sort()
+
+    # -- preemption --------------------------------------------------------
+    def pick_victim(self, below_priority: int):
+        """Preempt policy: among active requests with priority strictly
+        below ``below_priority``, pick the lowest-priority one with the
+        most work remaining (ties: highest rid, i.e. latest arrival).
+        Decode-phase requests are preferred victims — spilling one
+        frees a full row at zero recompute; a mid-prefill victim is
+        chosen only when nothing is decoding.  Returns None when no
+        strictly-lower-priority victim exists (equal-priority
+        preemption would thrash: the pool drains by itself)."""
+        cands = [st for st in self.active.values()
+                 if st.req.priority < below_priority]
+        if not cands:
+            return None
+        decode = [st for st in cands if not st.prefilling]
+        pool = decode or cands
+        return max(pool, key=lambda st: (-st.req.priority, st.remaining,
+                                         st.req.rid))
+
+    def remove(self, st: RequestState) -> None:
+        """Detach an active request from its slot WITHOUT finishing it
+        (the spill half of preempt/suspend — the caller owns where the
+        RequestState goes next)."""
+        assert self.active.get(st.slot) is st
+        del self.active[st.slot]
+        self.free_slots.append(st.slot)
+        self.free_slots.sort()
+        st.slot = -1
+
+    def push_resume(self, st: RequestState) -> None:
+        """Park a spilled RequestState for re-admission, keeping the
+        class's resume queue ordered by original arrival (fair resume
+        ordering: earliest-arrived preemptee restores first no matter
+        how many times it was bounced)."""
+        q = self.resume.setdefault(st.req.priority, [])
+        q.append(st)
+        q.sort(key=lambda s: (s.req.arrival, s.req.rid))
+
+    def preempt(self, st: RequestState) -> None:
+        """Spill-side bookkeeping: free the slot and queue the state
+        for automatic resume (the engine spills the KV footprint to the
+        store before calling this)."""
+        self.remove(st)
+        self.push_resume(st)
+
+    def cancel(self, rid: int):
+        """Remove a not-yet-active request (queued fresh or parked for
+        resume) by rid.  Returns the removed Request/RequestState, or
+        None if the rid is not waiting here (active requests cannot be
+        cancelled mid-flight — ROADMAP item 3)."""
+        for q in self.queues.values():
+            for req in q:
+                if req.rid == rid:
+                    q.remove(req)
+                    return req
+        for q in self.resume.values():
+            for st in q:
+                if st.req.rid == rid:
+                    q.remove(st)
+                    return st
+        return None

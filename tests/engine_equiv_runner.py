@@ -111,6 +111,45 @@ def check(mode: str, chunk_len: int, *, ground_truth: bool = False,
             ok &= match
             print(f"[{tag}] request {i} vs T.forward: "
                   f"{'OK' if match else 'MISMATCH'}")
+
+    if paged:
+        # forced-preemption variant: the same trace with the host
+        # offload tier on, every request spilled to the KVStore once
+        # mid-decode (pages + prism kz/vz/gz/zsum state in one
+        # device->host gather) and restored through the page-aware
+        # admission path — final tokens must still equal the
+        # uninterrupted oracle's, pinning spill/restore bit-equality
+        # on the sharded mesh in BOTH decode modes
+        pre = ServingEngine(CFG, mesh, params, paged=True, offload=True,
+                            **kw)
+        for p in prompts[:4]:
+            pre.submit(p, max_new_tokens=8)
+        for _ in range(4):
+            pre.step()
+        for p in prompts[4:]:
+            pre.submit(p, max_new_tokens=8)
+        hit = set()
+        for _ in range(2000):
+            if not pre._sched.has_work and not pre._pending:
+                break
+            pre.step()
+            for st in list(pre._sched.active.values()):
+                rid = st.req.rid
+                if (rid not in hit and not st.prefilling
+                        and len(st.generated) >= 1 and not st.finished()):
+                    assert pre.preempt(rid)
+                    hit.add(rid)
+        forced = pre.results()
+        match = forced == concurrent and len(hit) == 6
+        ok &= match
+        st6 = pre.stats
+        ok &= st6.preemptions >= 6 and st6.restore_hits >= 6
+        ok &= st6.restore_misses == 0 and len(pre.kv_store) == 0
+        pre.kv_cache.check()
+        print(f"[{tag}] forced-preempt: {'OK' if match else 'MISMATCH'} "
+              f"(preemptions={st6.preemptions} "
+              f"spilled_pages={st6.spilled_pages} "
+              f"restore_hits={st6.restore_hits})")
     return ok
 
 
