@@ -22,6 +22,9 @@ Gates (exit 1 on any failure):
     gang with TTFT p50 <= chunked; on the page-starved overload trace
     the host offload tier must stay token-identical with preemption ON
     vs OFF and must not worsen the interactive class's TTFT (PR-7);
+    under seeded all-kinds fault injection (PR-8 chaos soak, 3 seeds)
+    every completed request must be token-identical to the clean run
+    and the drained engine must audit leak-free;
   * throughput — the engine's logical-clock requests-per-kstep (packed
     and chunked, main trace) may not regress more than ``--tolerance``
     (default 20%) vs the committed baseline.  The logical clock runs
@@ -121,6 +124,24 @@ def compare(decode_base, decode_cur, engine_base, engine_cur,
          f"interactive-class TTFT p50 with preemption <= without "
          f"(speedup x"
          f"{eg.get('preempt_interactive_ttft_speedup', 0.0):.2f})")
+
+    # -- chaos soak (fault injection): structural ----------------------
+    chaos = engine_cur.get("traces", {}).get("chaos", {})
+    fired = {name: c.get("faults_injected", 0)
+             for name, c in chaos.items()}
+    gate("engine/chaos_token_match",
+         eg.get("chaos_token_match", False),
+         "every request completed under seeded all-kinds fault "
+         "injection is token-identical to the clean run (3 seeds; "
+         f"faults fired per seed: {fired})")
+    gate("engine/chaos_zero_leak",
+         eg.get("chaos_zero_leak", False),
+         "pages/state rows/store bytes/slots all reclaimed after the "
+         "chaos drain on every seed")
+    gate("engine/chaos_faults_fired",
+         eg.get("chaos_faults_fired", False),
+         "each chaos seed injected > 0 faults and completed > 0 "
+         "requests")
 
     # -- engine bench: logical-clock throughput vs baseline ------------
     for mode in ("packed", "chunked"):

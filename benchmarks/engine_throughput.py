@@ -111,7 +111,8 @@ def prefill_flops_per_request(cfg, plens, mode: str) -> float:
 
 
 def build_engine(mode: str, *, prefix_cache: bool | None = None,
-                 offload: bool = False, n_pages: int | None = None):
+                 offload: bool = False, n_pages: int | None = None,
+                 faults=None, max_restarts: int = 3):
     import jax
     from repro.models import transformer as T
     from repro.runtime.serve import ServeHParams
@@ -129,7 +130,8 @@ def build_engine(mode: str, *, prefix_cache: bool | None = None,
         decode_per_prefill=DECODE_PER_PREFILL,
         chunk_len=CHUNK_LEN, token_budget=TOKEN_BUDGET,
         prefill_mode=prefill_mode, gang=(mode == "gang"),
-        prefix_cache=prefix_cache, offload=offload, n_pages=n_pages)
+        prefix_cache=prefix_cache, offload=offload, n_pages=n_pages,
+        faults=faults, max_restarts=max_restarts)
     eng = ServingEngine(cfg, mesh, params, ecfg, clock=clock)
     return eng, clock, cfg
 
@@ -288,11 +290,86 @@ def run_trace(mode: str, trace, costs, *,
         "out_of_pages": s["out_of_pages"],
         "prefix_hits": s["prefix_hits"],
         "prefix_tokens_saved": s["prefix_tokens_saved"],
+        "restarts": s["restarts"],
+        "deadline_miss": s["deadline_miss"],
+        "quarantined": s["quarantined"],
+        "failed_requests": s["failed_requests"],
+        "faults_injected": s["faults_injected"],
         "elapsed_steps": steps,
         "wall_decode_ms": med(wall["decode"]),
         "wall_prefill_ms": med(wall["prefill"]),
         "wall_packed_ms": med(wall["packed"]),
     }, results
+
+
+def run_chaos(trace, clean_toks, *, seed: int) -> dict:
+    """Chaos soak: the page-starved overload trace through the packed
+    offload engine with EVERY fault kind enabled (``FaultPlan.chaos``)
+    — store put/get loss, page poisoning, admission stalls, tick
+    delays.  Not a throughput measurement: the return value carries
+    the correctness verdicts compare.py gates —
+
+      * ``token_match``: every request the faulted engine COMPLETED
+        emitted exactly the clean run's tokens (per-request seeded
+        sampling makes tokens independent of timing, slots, and
+        restarts, so recovery is provably lossless);
+      * ``zero_leak``: after the drain, page refcounts audit clean,
+        every page/state row/slot is back in its pool, and the host
+        store holds zero bytes;
+      * fault/recovery counters for the report.
+
+    Runs its own drive loop (not ``run_trace``): failed requests mean
+    ``results() != trace length``, stalled ticks need a clock bump,
+    and a stuck-admission tick must still advance the logical clock."""
+    from repro.serving import FaultPlan, SamplingParams
+
+    eng, clock, cfg = build_engine(
+        "packed", prefix_cache=False, offload=True, n_pages=14,
+        faults=FaultPlan.chaos(seed), max_restarts=8)
+    for i, (arrival, prompt, gen, pri) in enumerate(trace):
+        eng.submit(prompt, max_new_tokens=gen,
+                   sampling=SamplingParams(seed=i), arrival=arrival,
+                   priority=pri)
+    for _ in range(200_000):
+        kind = eng.step()
+        if kind != "idle":
+            clock.t += 1.0
+        elif eng._sched.has_work:
+            clock.t += 1.0             # stalled admission: retry
+        elif eng._pending:
+            clock.t += max(1.0, eng.next_arrival() - eng.now())
+        else:
+            break
+    else:
+        raise RuntimeError(f"chaos seed {seed} did not drain")
+
+    results = eng.results()
+    failed = eng.failed()
+    token_match = all(toks == clean_toks[rid]
+                      for rid, toks in results.items())
+    kv, store = eng.kv_cache, eng.kv_store
+    kv.check()
+    zero_leak = (not kv.slot_pages and not kv.slot_state
+                 and kv.table.free_pages == kv.paging.n_pages
+                 and sorted(kv._state_free)
+                 == list(range(kv.paging.n_state_pages))
+                 and len(store) == 0 and store.bytes_used == 0
+                 and sorted(eng._sched.free_slots) == list(range(N_SLOTS)))
+    s = eng.stats.summary()
+    return {
+        "seed": seed,
+        "completed": len(results),
+        "failed": len(failed),
+        "token_match": bool(token_match),
+        "zero_leak": bool(zero_leak),
+        "accounted": len(results) + len(failed) == len(trace),
+        "faults_injected": s["faults_injected"],
+        "injected_by_kind": dict(eng._injector.injected),
+        "restarts": s["restarts"],
+        "quarantined": s["quarantined"],
+        "restore_misses": s["restore_misses"],
+        "preemptions": s["preemptions"],
+    }
 
 
 def packed_cache_sized_concats() -> int:
@@ -400,6 +477,14 @@ def run_all() -> dict:
             "packed", overload_trace, costs, prefix_cache=False,
             offload=on, n_pages=14)
 
+    # chaos soak: the same overload trace under seeded all-kinds fault
+    # injection, three seeds — surviving requests must emit the clean
+    # run's exact tokens and the drained engine must audit leak-free
+    res["chaos"] = {}
+    for seed in (0, 1, 2):
+        res["chaos"][f"seed{seed}"] = run_chaos(
+            overload_trace, toks["overload"]["preempt_on"], seed=seed)
+
     flops = {}
     for trace_name, trace in (("main", main_trace),
                               ("short", short_trace)):
@@ -499,6 +584,21 @@ def run_all() -> dict:
             res["overload"]["preempt_off"]["ttft_p50_by_class"]["1"]
             / max(res["overload"]["preempt_on"]["ttft_p50_by_class"]["1"],
                   1e-9)),
+        # ---- chaos-soak gates ----------------------------------------
+        # every request a faulted engine completed is token-identical
+        # to the clean run, on every seed ...
+        "chaos_token_match": all(
+            c["token_match"] and c["accounted"]
+            for c in res["chaos"].values()),
+        # ... the drained engine leaks nothing (pages, state rows,
+        # store bytes, slots) on every seed ...
+        "chaos_zero_leak": all(
+            c["zero_leak"] for c in res["chaos"].values()),
+        # ... and each seed actually injected faults AND completed
+        # requests (an empty soak proves nothing)
+        "chaos_faults_fired": all(
+            c["faults_injected"] > 0 and c["completed"] > 0
+            for c in res["chaos"].values()),
     }
     return {
         "bench": "engine_throughput",
@@ -551,6 +651,13 @@ def main(report):
                f"saved {s['prefix_tokens_saved']})")
         report(f"engine/prefix/{name}/prefill_mflops_per_req", 0.0,
                f"{flops['prefix_' + name] / 1e6:.2f}")
+    for name, c in res["chaos"].items():
+        report(f"engine/chaos/{name}", 0.0,
+               f"completed {c['completed']} failed {c['failed']} "
+               f"faults {c['faults_injected']} "
+               f"(restarts {c['restarts']}, quarantined "
+               f"{c['quarantined']}) token_match={c['token_match']} "
+               f"zero_leak={c['zero_leak']}")
     for name in ("preempt_on", "preempt_off"):
         s = res["overload"][name]
         report(f"engine/overload/{name}/requests_per_ksteps", 0.0,
@@ -569,7 +676,9 @@ def main(report):
                  "packed_vs_gang_saturated",
                  "packed_ttft_no_worse_saturated", "prefix_token_match",
                  "prefix_ttft_no_worse", "preempt_token_match",
-                 "preempt_fired", "preempt_ttft_no_worse"):
+                 "preempt_fired", "preempt_ttft_no_worse",
+                 "chaos_token_match", "chaos_zero_leak",
+                 "chaos_faults_fired"):
         report(f"engine/gate/{gate}", 0.0, str(g[gate]))
     report("engine/preempt_interactive_ttft_speedup", 0.0,
            f"x{g['preempt_interactive_ttft_speedup']:.2f}")
@@ -613,5 +722,7 @@ if __name__ == "__main__":
             and g["prefix_token_match"] and g["prefix_ttft_no_worse"]
             and g["prefix_reuse_savings"] > 0
             and g["preempt_token_match"] and g["preempt_fired"]
-            and g["preempt_ttft_no_worse"]):
+            and g["preempt_ttft_no_worse"]
+            and g["chaos_token_match"] and g["chaos_zero_leak"]
+            and g["chaos_faults_fired"]):
         sys.exit(1)

@@ -80,6 +80,12 @@ def main():
                     help="[engine] priority classes in the synthetic "
                          "trace — each request draws uniform [0, CLASSES)"
                          " (higher = more urgent; 1 = plain FIFO)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="[engine] seeded fault injection: run the "
+                         "trace under FaultPlan.chaos(SEED) — store "
+                         "put/get loss, page poisoning, admission "
+                         "stalls, tick delays — and audit zero leaks "
+                         "after the drain")
     args = ap.parse_args()
 
     import jax
@@ -114,7 +120,10 @@ def main():
         mode="prism" if args.decode_mode == "prism" else "voltage")
 
     if args.engine:
-        from repro.serving import EngineConfig, SamplingParams, ServingEngine
+        from repro.serving import (EngineConfig, FaultPlan, SamplingParams,
+                                   ServingEngine)
+        faults = (FaultPlan.chaos(args.chaos)
+                  if args.chaos is not None else None)
         ecfg = EngineConfig(
             n_slots=args.batch, prefill_len=n, max_cache=cap, hp=hp,
             prism=prism, gang=args.gang, chunk_len=args.chunk_len,
@@ -123,7 +132,8 @@ def main():
             paged=not args.no_paged, page_tokens=args.page_tokens,
             n_pages=args.n_pages,
             prefix_cache=False if args.no_prefix_cache else None,
-            offload=args.offload)
+            offload=args.offload, faults=faults,
+            max_restarts=8 if faults is not None else 3)
         eng = ServingEngine(cfg, mesh, params, ecfg)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
@@ -140,6 +150,8 @@ def main():
         extras = (f", {args.priority} priority classes"
                   if args.priority > 1 else "")
         extras += ", host offload" if args.offload else ""
+        extras += (f", chaos seed {args.chaos}"
+                   if args.chaos is not None else "")
         print(f"[engine] {args.requests} requests, Poisson rate "
               f"{args.rate}/s, {args.batch} slots, {mode} admission"
               f"{extras}")
@@ -147,6 +159,26 @@ def main():
         for k, v in eng.stats.summary().items():
             print(f"[engine] {k:22s} {v:.3f}"
                   if isinstance(v, float) else f"[engine] {k:22s} {v}")
+        if faults is not None:
+            inj = eng._injector
+            print(f"[chaos] injected {inj.stats()['injected']} over "
+                  f"{inj.stats()['ops']} opportunities")
+            done = len(eng.results())
+            failed = eng.failed()
+            print(f"[chaos] completed {done}/{args.requests}, "
+                  f"failed {len(failed)} {sorted(failed.values())}")
+            assert done + len(failed) == args.requests, (
+                done, failed, args.requests)
+            # zero-leak audits: page refcounts consistent, no slot
+            # holds pages, store drained, every slot back in the pool
+            kv = eng.kv_cache
+            kv.check()
+            assert not kv.slot_pages and not kv.slot_state
+            if eng.kv_store is not None:
+                assert len(eng.kv_store) == 0, eng.kv_store.stats()
+            assert sorted(eng._sched.free_slots) == list(
+                range(args.batch))
+            print("[chaos] zero-leak audits OK")
         return
 
     prompts = np.random.default_rng(0).integers(

@@ -57,15 +57,24 @@ class KVStore:
     tests use to simulate total host-memory pressure.
     """
 
-    def __init__(self, capacity_bytes: int | None = None):
+    def __init__(self, capacity_bytes: int | None = None, *,
+                 injector=None):
         self.capacity_bytes = capacity_bytes
         self._entries: OrderedDict[Any, SpilledEntry] = OrderedDict()
         self.bytes_used = 0
         self.puts = 0
-        self.drops = 0          # puts rejected (entry > capacity)
+        self.drops = 0          # puts rejected (entry > capacity / fault)
         self.evictions = 0      # LRU entries pushed out by later puts
         self.hits = 0           # pops that found their entry
         self.misses = 0         # pops/peeks that did not
+        # seeded chaos hook (runtime/faults.py): a fired
+        # ``store_put_loss`` drops the put, a fired ``store_get_loss``
+        # loses an existing entry at read time — both surface to the
+        # engine as ordinary restore misses
+        self._injector = injector
+
+    def _lost(self, kind: str) -> bool:
+        return self._injector is not None and self._injector.fire(kind)
 
     # -- write side ----------------------------------------------------
     def put(self, key, n_pages: int, payload, *, tokens: int = 0) -> bool:
@@ -74,6 +83,9 @@ class KVStore:
         if key in self._entries:
             self.drop(key)
         self.puts += 1
+        if self._lost("store_put_loss"):
+            self.drops += 1
+            return False
         if self.capacity_bytes is not None and nbytes > self.capacity_bytes:
             self.drops += 1
             return False
@@ -95,6 +107,10 @@ class KVStore:
         if ent is None:
             self.misses += 1
             return None
+        if self._lost("store_get_loss"):
+            self.drop(key)              # torn at read time: entry gone
+            self.misses += 1
+            return None
         self._entries.move_to_end(key)
         return ent
 
@@ -102,6 +118,10 @@ class KVStore:
         """Remove and return the entry, or None if it was lost."""
         ent = self._entries.pop(key, None)
         if ent is None:
+            self.misses += 1
+            return None
+        if self._lost("store_get_loss"):
+            self.bytes_used -= ent.nbytes
             self.misses += 1
             return None
         self.bytes_used -= ent.nbytes
@@ -113,6 +133,25 @@ class KVStore:
         ent = self._entries.pop(key, None)
         if ent is not None:
             self.bytes_used -= ent.nbytes
+
+    # -- snapshot / restore --------------------------------------------
+    def entries(self) -> list:
+        """The live entries in LRU order (oldest first) — what an
+        engine snapshot journals.  The SpilledEntry objects are shared,
+        not copied; callers that persist them must deepcopy."""
+        return list(self._entries.values())
+
+    def adopt(self, entries) -> None:
+        """Re-insert journalled entries verbatim (engine restore).
+        Bypasses the counters AND the fault injector: restoring a
+        snapshot replays state, it is not a new injection
+        opportunity."""
+        for ent in entries:
+            old = self._entries.pop(ent.key, None)
+            if old is not None:
+                self.bytes_used -= old.nbytes
+            self._entries[ent.key] = ent
+            self.bytes_used += ent.nbytes
 
     # -- introspection -------------------------------------------------
     def __contains__(self, key) -> bool:

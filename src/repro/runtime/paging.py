@@ -702,6 +702,95 @@ class KVCache:
                                             jnp.asarray(pages, jnp.int32),
                                             jnp.asarray(srow, jnp.int32))
 
+    # -- fault injection + quarantine (runtime/faults.py) ------------------
+    def poison_page(self, page: int) -> None:
+        """NaN-fill one pool page's k/v content — the ``page_poison``
+        chaos fault (a simulated device-memory corruption).  Pure
+        content damage: the page table, maps, and refcounts are
+        untouched, so ONLY reads through this physical page see the
+        poison — which is exactly what the isfinite quarantine test
+        needs to prove neighbour isolation."""
+        import jax.numpy as jnp
+
+        def body(storage, p):
+            def one(tree, axis):
+                out = {}
+                for key, v in tree.items():
+                    if key in ("k", "v"):
+                        row = lax.dynamic_slice_in_dim(v, p, 1, axis=axis)
+                        v = lax.dynamic_update_slice_in_dim(
+                            v, jnp.full_like(row, jnp.nan), p, axis=axis)
+                    out[key] = v
+                return out
+            return {"scan": [one(t, 1) for t in storage["scan"]],
+                    "tail": [one(t, 0) for t in storage["tail"]]}
+        prog = self._jit("poison_page", body)
+        self.storage = prog(self.storage, jnp.asarray(page, jnp.int32))
+
+    def scrub_slot(self, slot: int) -> int:
+        """Zero the slot's PRIVATE (refcount == 1) pages plus its
+        means-state row — the quarantine step before an in-place
+        re-prefill, and the decontamination step before failed pages
+        rejoin the free list.  Zeroing (not just overwriting) matters:
+        masked attention still computes ``0 * NaN = NaN`` over dead
+        columns, so poisoned content must be physically cleared before
+        any slot reads through these pages again.  COW-shared pages are
+        skipped — other holders read them, and the poison fault never
+        targets a shared page.  Returns pages scrubbed."""
+        import jax.numpy as jnp
+
+        pages = [p for p in self.slot_pages[slot]
+                 if self.table.refs[p] == 1]
+        srow = self.slot_state[slot]
+        if not pages:
+            return 0
+        key = ("scrub", len(pages))
+        if key not in self._jit_cache:
+            def body(storage, idx, sr):
+                def one(tree, axis):
+                    out = {}
+                    for k, v in tree.items():
+                        if k in ("k", "v"):
+                            zeros_sh = ((len(pages),) + v.shape[1:]
+                                        if axis == 0 else
+                                        v.shape[:1] + (len(pages),)
+                                        + v.shape[2:])
+                            z = jnp.zeros(zeros_sh, v.dtype)
+                            v = (v.at[idx].set(z) if axis == 0
+                                 else v.at[:, idx].set(z))
+                        elif k in ("kz", "vz", "gz", "zsum"):
+                            row = lax.dynamic_slice_in_dim(
+                                v, sr, 1, axis=axis)
+                            v = lax.dynamic_update_slice_in_dim(
+                                v, jnp.zeros_like(row), sr, axis=axis)
+                        out[k] = v
+                    return out
+                return {"scan": [one(t, 1) for t in storage["scan"]],
+                        "tail": [one(t, 0) for t in storage["tail"]]}
+            self._jit_cache[key] = jax.jit(
+                body, donate_argnums=(0,), out_shardings=self.sharding)
+        self.storage = self._jit_cache[key](self.storage,
+                                            jnp.asarray(pages, jnp.int32),
+                                            jnp.asarray(srow, jnp.int32))
+        return len(pages)
+
+    # -- snapshot / restore (engine journal) -------------------------------
+    def extract_slot(self, slot: int):
+        """One live slot's full cache footprint as a host pytree — the
+        engine-snapshot path, same bit-exact gather as ``spill`` but
+        non-destructive (the slot keeps its pages).  None in host-only
+        bookkeeping mode."""
+        if self.storage is None:
+            return None
+        return self._extract(self.slot_pages[slot], self.slot_state[slot])
+
+    def inject_slot(self, slot: int, payload) -> None:
+        """Scatter a journalled footprint into the (fresh) pages bound
+        to ``slot`` — the engine-restore path."""
+        if self.storage is None or payload is None:
+            return
+        self._inject(self.slot_pages[slot], self.slot_state[slot], payload)
+
     # -- dense-rowset lifecycle (legacy oracle path) -----------------------
     def grow_from(self, prefill_cache, lay_from):
         """Dense mode: pad a prefill-sized cache to this cache's decode

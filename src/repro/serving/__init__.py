@@ -1,10 +1,12 @@
 """Request-level serving: continuous batching over the sequence-sharded
 decode runtime (docs/serving.md)."""
+from ..runtime.faults import FaultInjector, FaultPlan, FaultSpec
 from ..runtime.offload import KVStore, SpilledEntry
 from .sampling import SamplingParams, sample_token
 from .scheduler import Request, RequestState, FifoScheduler, EngineStats
-from .engine import EngineConfig, ServingEngine
+from .engine import EngineConfig, EngineSnapshot, ServingEngine
 
 __all__ = ["SamplingParams", "sample_token", "Request", "RequestState",
            "FifoScheduler", "EngineStats", "EngineConfig",
-           "ServingEngine", "KVStore", "SpilledEntry"]
+           "EngineSnapshot", "ServingEngine", "KVStore", "SpilledEntry",
+           "FaultInjector", "FaultPlan", "FaultSpec"]

@@ -54,10 +54,12 @@ quantifies the differences.
 """
 from __future__ import annotations
 
+import copy
 import heapq
 import math
 import time
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -65,8 +67,9 @@ import numpy as np
 
 from ..core.protocol import PrismConfig
 from ..models.config import ModelConfig
+from ..runtime.faults import FaultInjector, FaultPlan
 from ..runtime.offload import KVStore
-from ..runtime.paging import make_paged_layout
+from ..runtime.paging import AdmitPlan, make_paged_layout
 from ..runtime.serve import (ServeHParams, _paged_placement, make_layout,
                              make_chunk_prefill_step, make_kv_cache,
                              make_packed_step, make_prefill_step,
@@ -108,8 +111,17 @@ class EngineConfig:
     prefix_cache: bool | None = None   # shared-prefix COW reuse
     offload: bool = False              # host KVStore tier + preemption
     offload_bytes: int | None = None   # store capacity (None = unbounded)
+    faults: FaultPlan | None = None    # seeded chaos plan (None = off)
+    max_restarts: int = 3              # reset_for_refill bound per request
 
     def __post_init__(self):
+        if self.max_restarts < 1:
+            raise ValueError(f"max_restarts {self.max_restarts} < 1")
+        if self.faults is not None and not isinstance(self.faults,
+                                                      FaultPlan):
+            raise ValueError(
+                f"faults must be a FaultPlan, got "
+                f"{type(self.faults).__name__}")
         if self.prefill_mode not in ("packed", "chunked", "padded"):
             raise ValueError(f"prefill_mode {self.prefill_mode!r} not in "
                              "('packed', 'chunked', 'padded')")
@@ -155,6 +167,37 @@ class EngineConfig:
                 P=1, cr=self.hp.means_cr,
                 mode="prism" if self.hp.decode_mode == "prism"
                 else "voltage"))
+
+
+@dataclass
+class EngineSnapshot:
+    """Crash-consistent journal of one engine's complete serving state,
+    taken between steps (``ServingEngine.snapshot``).  Host-side only:
+    every live slot's cache footprint rides as the same bit-exact
+    device→host gather the offload tier spills through, so a restored
+    engine (``ServingEngine.restore`` on a fresh engine built from the
+    SAME config/params/mesh) resumes token-identically to one that was
+    never killed — in exact AND prism decode modes (the prism means
+    rows kz/vz/gz/zsum are part of the gathered payload).
+
+    ``active`` holds ``(slot, RequestState, payload, n_pages)`` per
+    live slot; RNG state travels inside the deepcopied RequestStates
+    (the per-request numpy Generators pickle their exact position)."""
+    now: float                         # engine-clock time of the cut
+    next_rid: int
+    active: list                       # [(slot, state, payload, n_pages)]
+    queues: dict                       # priority -> [Request] (fresh)
+    resume: dict                       # priority -> [RequestState]
+    pending: list                      # future arrivals (heap entries)
+    suspended: dict                    # rid -> RequestState
+    store_entries: list                # journalled SpilledEntry objects
+    results: dict                      # rid -> finished RequestState
+    failed: dict                       # rid -> failure reason
+    stats: EngineStats
+    injector: object                   # FaultInjector mid-stream (or None)
+    decodes_since_prefill: int
+    drain: bool
+    has_deadlines: bool
 
 
 class ServingEngine:
@@ -251,12 +294,23 @@ class ServingEngine:
         self._plans: dict = {}         # rid -> reserved AdmitPlan
         self._next_rid = 0
         self._t0 = None                # clock origin (first submit/run)
+        # seeded chaos: one injector per engine, shared with the store
+        # so every fault kind draws from the same replayable plan
+        self._injector = (FaultInjector(config.faults)
+                          if config.faults is not None else None)
         # host offload tier: spilled KV pages + prism state, keyed by
         # rid.  Tests may swap in a capacity-limited / faulty store.
-        self._store = (KVStore(capacity_bytes=config.offload_bytes)
+        self._store = (KVStore(capacity_bytes=config.offload_bytes,
+                               injector=self._injector)
                        if config.offload else None)
         self._suspended: dict = {}     # rid -> parked RequestState
         self._from_store: set = set()  # rids whose reservation restores
+        self._failed: dict = {}        # rid -> reason (deadline/restarts)
+        self._has_deadlines = False    # any live request with a deadline
+        # the NaN/inf guard rides the hot decode paths; the padded
+        # flush admission cannot re-prefill an active slot in place,
+        # so quarantine is only armed for the packed/chunked engines
+        self._nan_guard = self.prefill_mode != "padded"
 
     @staticmethod
     def _derive_paging(base, config: EngineConfig):
@@ -341,13 +395,20 @@ class ServingEngine:
 
     def submit(self, prompt, *, max_new_tokens: int, eos_id=None,
                sampling: SamplingParams = SamplingParams(),
-               arrival: float | None = None, priority: int = 0) -> int:
+               arrival: float | None = None, priority: int = 0,
+               deadline: float | None = None) -> int:
         """Queue one request.  ``arrival`` (engine-relative seconds) may
         lie in the future — the run loop holds the request back until
         the clock passes it, which is how Poisson traces are replayed.
         ``priority`` (higher = more urgent) picks the admission class;
         with ``offload=True`` a blocked higher-priority arrival preempts
-        lower-priority work into the host KV store."""
+        lower-priority work into the host KV store.  ``deadline`` is an
+        absolute engine-clock time (same clock as ``arrival`` — wall
+        seconds, or logical steps under an injected clock): once the
+        clock passes it the request is cancelled wherever it is
+        (queued, prefilling, decoding, spilled, or suspended), its
+        pages/store bytes are reclaimed, and the miss is counted per
+        priority class."""
         prompt = tuple(int(t) for t in prompt)
         if not 1 <= len(prompt) <= self.prefill_len:
             raise ValueError(
@@ -356,12 +417,18 @@ class ServingEngine:
             raise ValueError(
                 f"prompt {len(prompt)} + max_new {max_new_tokens} exceeds "
                 f"cache capacity {self.layout.cap}")
+        arrival = self.now() if arrival is None else arrival
+        if deadline is not None:
+            if deadline <= arrival:
+                raise ValueError(
+                    f"deadline {deadline} <= arrival {arrival}")
+            self._has_deadlines = True
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
                       eos_id=eos_id, sampling=sampling,
-                      arrival=self.now() if arrival is None else arrival,
-                      priority=priority)
+                      arrival=arrival, priority=priority,
+                      deadline=deadline)
         # always route through the arrival-ordered pending heap so a
         # late submit with an already-past arrival cannot jump ahead of
         # earlier arrivals still waiting to be released (FIFO by
@@ -388,14 +455,25 @@ class ServingEngine:
     def step(self) -> str:
         """Run one scheduler decision: a packed tick (chunked mode: a
         prefill chunk; padded mode: an admission flush), a decode step,
-        or nothing ('idle').  Returns which.  In packed mode a tick
-        with nothing prefilling falls through to the plain decode
-        program — both programs live in the compiled-program cache, so
-        alternating kinds never retrace."""
+        a stall (chaos ``tick_delay``), or nothing ('idle').  Returns
+        which.  In packed mode a tick with nothing prefilling falls
+        through to the plain decode program — both programs live in the
+        compiled-program cache, so alternating kinds never retrace."""
+        kind = self._step_inner()
+        if self._injector is not None:
+            self.stats.faults_injected = self._injector.total_injected
+        return kind
+
+    def _step_inner(self) -> str:
         sch = self._sched
         self._release_arrivals()
         if self.stats.t_start is None:
             self.stats.t_start = self.now()
+        if self._has_deadlines:
+            self._expire()
+        if (self._injector is not None and sch.has_work
+                and self._injector.fire("tick_delay")):
+            return "stalled"           # the whole tick does nothing
 
         if self.prefill_mode == "padded":
             if sch.want_prefill():
@@ -411,6 +489,7 @@ class ServingEngine:
 
         decoding = sch.decoding()
         if decoding:
+            self._maybe_poison()
             tok = np.zeros(self.n_slots, np.int32)
             pos = np.full(self.n_slots, -1, np.int32)
             for st in decoding:
@@ -425,8 +504,15 @@ class ServingEngine:
             self.stats.step_latency.append(now - t0)
             self.stats.occupancy.append(len(sch.active) / self.n_slots)
             self.stats.decode_steps += 1
+            # ONE fused non-finite reduction over the tick's logits —
+            # the quarantine trigger costs a single host-side pass
+            bad = (~np.isfinite(rows).all(axis=-1)
+                   if self._nan_guard else None)
             for st in decoding:
-                self._advance_decode(st, rows[st.slot], now)
+                if bad is not None and bad[st.slot]:
+                    self._quarantine(st)
+                else:
+                    self._advance_decode(st, rows[st.slot], now)
             sch.note_decode()
             self.stats.t_end = self.now()
             return "decode"
@@ -484,8 +570,17 @@ class ServingEngine:
         kv, rid = self._kv, st.req.rid
         plan = kv.plan_restore(rid, self._store)
         if plan is None:
-            st.reset_for_refill()
             self.stats.restore_misses += 1
+            if st.restarts >= self.config.max_restarts:
+                # the restart budget is spent: fail the head candidate
+                # here (it holds no pages, no slot, no store entry) so
+                # it cannot block the admission queue forever
+                self._sched.cancel(rid)
+                self._store.drop(rid)
+                self._failed[rid] = "max_restarts"
+                self.stats.failed_requests += 1
+                return False
+            self._note_restart(st)
             return self._admit_gate(st.req)
         if not kv.can_admit(plan, reclaim=False):
             if kv.prefix is not None:
@@ -528,8 +623,11 @@ class ServingEngine:
                 else:
                     # entry evicted between plan and bind: the bound
                     # pages are large enough for a full re-prefill
-                    st.reset_for_refill()
                     self.stats.restore_misses += 1
+                    if st.restarts >= self.config.max_restarts:
+                        self._fail_active(st, "max_restarts")
+                        continue
+                    self._note_restart(st)
             elif plan.covered:
                 st.nprefilled = plan.covered
                 self.stats.prefix_hits += 1
@@ -546,6 +644,9 @@ class ServingEngine:
         once pressure clears.  Equal-priority arrivals never preempt —
         the pool drains by itself and swapping would only thrash."""
         sch = self._sched
+        if (self._injector is not None and sch.queued
+                and self._injector.fire("admission_stall")):
+            return                     # control plane stuck this tick
         if sch.want_admit():
             self._admit()
         if self._store is None:
@@ -581,6 +682,165 @@ class ServingEngine:
             if st.req.rid == rid:
                 return st
         return None
+
+    # -- fault injection + quarantine ----------------------------------
+    def _maybe_poison(self) -> None:
+        """Chaos ``page_poison``: NaN-fill the first page of one
+        decoding slot whose page is PRIVATE (refcount 1 — shared prefix
+        pages are other requests' reads; corrupting one would break the
+        neighbour-isolation guarantee the quarantine test pins).  Page 0
+        always holds attended positions, so in exact decode mode the
+        poison reaches the slot's next logits row and the isfinite
+        guard fires the same tick.  Prism decode reads remote content
+        through the precomputed means state, where raw-page poison can
+        go undetected and leak through the free list — injection is
+        exact-mode only.
+
+        Injection happens only before PURE-DECODE ticks, where one
+        poisoned page NaNs exactly its own slot's logits row (the
+        quarantine test pins this isolation).  The token-packed program
+        is excluded: its intra-tick pass masks cross-request columns
+        with an additive ``NEG_INF`` bias and folds ``0 * NaN`` in the
+        stat combine, so one poisoned slot's second-layer K/V
+        projection would NaN every decode row in the tick — detection
+        still fires and recovery stays token-identical, but the blast
+        radius (spurious neighbour quarantines) would be wrong.  The
+        packed path keeps its isfinite guard armed purely defensively;
+        same-tick detection on the decode path means a scrub always
+        lands before any packed tick can gather the poisoned page."""
+        if (self._injector is None or not self._paged
+                or self._hp.decode_mode != "exact"):
+            return
+        kv = self._kv
+        cands = [st for st in self._sched.decoding()
+                 if kv.slot_pages.get(st.slot)
+                 and kv.table.refs[kv.slot_pages[st.slot][0]] == 1]
+        if not cands or not self._injector.fire("page_poison"):
+            return
+        st = cands[self._injector.pick("page_poison", len(cands))]
+        kv.poison_page(kv.slot_pages[st.slot][0])
+
+    def _note_restart(self, st: RequestState) -> None:
+        """The one re-prefill entry point: every recovery path (lost
+        restore, quarantine) goes through here so the aggregate restart
+        counter can never drift from the per-request ones."""
+        st.reset_for_refill()
+        self.stats.restarts += 1
+
+    def _fail_active(self, st: RequestState, reason: str) -> None:
+        """Fail-hard an ACTIVE request: scrub its private pages (NaN
+        content must never rejoin the free list — masked attention
+        still folds ``0 * NaN``), release pages + slot, and record the
+        failure.  The request never reaches ``results()``."""
+        if self._paged:
+            self._kv.scrub_slot(st.slot)
+            self._kv.free(st.slot, None)   # never register the prompt
+        else:
+            self._kv.reset_row(st.slot)
+        self._sched.remove(st)
+        self._failed[st.req.rid] = reason
+        self.stats.failed_requests += 1
+
+    def _quarantine(self, st: RequestState) -> None:
+        """Non-finite logits on a decode row: quarantine exactly this
+        slot.  Recovery is the existing ``reset_for_refill`` re-prefill
+        path — scrub the slot's pages and state row in place, then
+        replay the prompt into the SAME bound pages; per-request seeded
+        sampling makes the regenerated tokens identical.  Bounded by
+        ``max_restarts``: a slot that keeps producing NaNs fails hard
+        instead of burning ticks forever."""
+        self.stats.quarantined += 1
+        if st.restarts >= self.config.max_restarts:
+            self._fail_active(st, "max_restarts")
+            return
+        if self._paged:
+            try:
+                # fork any COW-shared prefix pages private first — the
+                # re-prefill rewrites position 0 onward, and shared
+                # pages must never see a write
+                self._kv.ensure_writable(st.slot, 0,
+                                         len(st.req.prompt) - 1)
+            except RuntimeError:
+                self._fail_active(st, "quarantine_out_of_pages")
+                return
+            self._kv.scrub_slot(st.slot)
+        else:
+            self._kv.reset_row(st.slot)
+        self._note_restart(st)
+
+    # -- deadline expiry -----------------------------------------------
+    def _miss(self, req, *, st: RequestState | None = None,
+              now: float | None = None) -> None:
+        self.stats.deadline_miss += 1
+        cls = self.stats.deadline_miss_by_class
+        cls[req.priority] = cls.get(req.priority, 0) + 1
+        self._failed[req.rid] = "deadline"
+        if st is not None and st.t_finish is None and now is not None:
+            st.t_finish = now
+
+    def _expire(self) -> None:
+        """Cancel every request whose deadline has passed, wherever it
+        sits in the lifecycle: future arrival, fresh queue, resume
+        queue (spilled), suspended (spilled), or active (prefilling or
+        decoding).  Each path reclaims exactly the resources that state
+        holds — heap entry, queue position, store bytes, or bound
+        pages + state row + slot — so a deadline storm leaves the
+        engine leak-free (the chaos audits pin this)."""
+        now = self.now()
+        dead = lambda req: req.deadline is not None and now >= req.deadline
+        # future arrivals (heap)
+        expired = [e for e in self._pending if dead(e[2])]
+        if expired:
+            self._pending = [e for e in self._pending if not dead(e[2])]
+            heapq.heapify(self._pending)
+            for _, _, req in expired:
+                self._miss(req)
+        sch = self._sched
+        # fresh queues + resume queues (spilled entries also free store
+        # bytes)
+        for q in sch.queues.values():
+            for req in [r for r in q if dead(r)]:
+                q.remove(req)
+                self._miss(req)
+        for q in sch.resume.values():
+            for st in [s for s in q if dead(s.req)]:
+                q.remove(st)
+                if self._store is not None:
+                    self._store.drop(st.req.rid)
+                self._miss(st.req, st=st, now=now)
+        # suspended sessions (store entry, no slot)
+        for rid in [r for r, s in self._suspended.items()
+                    if dead(s.req)]:
+            st = self._suspended.pop(rid)
+            self._store.drop(rid)
+            self._miss(st.req, st=st, now=now)
+        # active slots: free pages + state row + slot.  The prompt is
+        # never registered in the prefix cache — a cancelled request
+        # may hold a partially-prefilled page set.
+        for st in [s for s in list(sch.active.values()) if dead(s.req)]:
+            if self._paged:
+                self._kv.free(st.slot, None)
+            else:
+                self._kv.reset_row(st.slot)
+            sch.remove(st)
+            self._miss(st.req, st=st, now=now)
+        self._has_deadlines = any(
+            r.deadline is not None
+            for r in self._live_requests())
+
+    def _live_requests(self):
+        """Every not-yet-finished Request the engine still tracks."""
+        for _, _, req in self._pending:
+            yield req
+        for q in self._sched.queues.values():
+            yield from q
+        for q in self._sched.resume.values():
+            for st in q:
+                yield st.req
+        for st in self._sched.active.values():
+            yield st.req
+        for st in self._suspended.values():
+            yield st.req
 
     # -- public offload controls ---------------------------------------
     def preempt(self, rid: int) -> bool:
@@ -634,6 +894,102 @@ class ServingEngine:
             self._store.drop(rid)
             return True
         return False
+
+    # -- crash-consistent snapshot / restore ---------------------------
+    def snapshot(self) -> EngineSnapshot:
+        """Journal the engine's complete serving state into one
+        host-side object: every live slot's pages + prism state row
+        (the PR-7 bit-exact gather, non-destructive), the scheduler
+        queues, pending arrivals, suspended sessions, the offload
+        store's entries, per-request RNG states (inside the deepcopied
+        RequestStates), stats, and the fault injector's stream
+        position.  Must be called between steps (no reservation in
+        flight — always true outside ``step()``)."""
+        if not self._paged:
+            raise ValueError(
+                "snapshot requires the paged cache (paged=True): the "
+                "journal rides the page gather path")
+        assert not self._plans and not self._from_store, (
+            "snapshot mid-admission: call between engine steps")
+        active = []
+        for slot, st in sorted(self._sched.active.items()):
+            active.append((slot, copy.deepcopy(st),
+                           self._kv.extract_slot(slot),
+                           len(self._kv.slot_pages[slot])))
+        return EngineSnapshot(
+            now=self.now(),
+            next_rid=self._next_rid,
+            active=active,
+            queues={p: list(q) for p, q in self._sched.queues.items()
+                    if q},
+            resume={p: copy.deepcopy(q)
+                    for p, q in self._sched.resume.items() if q},
+            pending=copy.deepcopy(self._pending),
+            suspended=copy.deepcopy(self._suspended),
+            store_entries=(copy.deepcopy(self._store.entries())
+                           if self._store is not None else []),
+            results=copy.deepcopy(self._results),
+            failed=dict(self._failed),
+            stats=copy.deepcopy(self.stats),
+            injector=copy.deepcopy(self._injector),
+            decodes_since_prefill=self._sched._decodes_since_prefill,
+            drain=self._sched.drain,
+            has_deadlines=self._has_deadlines)
+
+    def restore(self, snap: EngineSnapshot) -> None:
+        """Rebuild the journalled serving state into THIS engine —
+        which must be fresh (no requests yet) and built from the same
+        config over the same params/mesh.  Each journalled slot
+        re-reserves its page count through the normal two-phase
+        admission and injects its payload; page ids may differ from the
+        killed engine's, which the per-tick maps make invisible.  The
+        prefix cache intentionally starts cold (it is a cache — losing
+        it costs recompute, never tokens).  The snapshot object is not
+        consumed: the same journal can restore any number of fresh
+        engines."""
+        if not self._paged:
+            raise ValueError("restore requires the paged cache")
+        if self._next_rid or self._sched.active or self._sched.queued:
+            raise ValueError("restore target must be a fresh engine")
+        snap = copy.deepcopy(snap)     # keep the journal re-restorable
+        sch = self._sched
+        sch.queues = {p: deque(q) for p, q in snap.queues.items()}
+        sch.resume = snap.resume
+        sch.drain = snap.drain
+        sch._decodes_since_prefill = snap.decodes_since_prefill
+        self._pending = snap.pending
+        heapq.heapify(self._pending)
+        self._suspended = snap.suspended
+        if self._store is not None:
+            self._store.adopt(snap.store_entries)
+        for slot, st, payload, n_pages in snap.active:
+            key = ("__restore__", slot)
+            if not self._kv.reserve(key, AdmitPlan(total_pages=n_pages,
+                                                   fresh_pages=n_pages)):
+                raise RuntimeError(
+                    f"restore out of pages binding slot {slot}")
+            self._kv.bind(key, slot)
+            st.slot = slot
+            self._kv.inject_slot(slot, payload)
+            sch.active[slot] = st
+            sch.free_slots.remove(slot)
+        self._results = snap.results
+        self._failed = snap.failed
+        self.stats = snap.stats
+        self._next_rid = snap.next_rid
+        self._has_deadlines = snap.has_deadlines
+        if snap.injector is not None:
+            self._injector = snap.injector
+            if self._store is not None:
+                self._store._injector = snap.injector
+        # clock continuity: the restored engine's now() resumes at the
+        # snapshot cut, so arrivals/deadlines keep their meaning
+        self._t0 = self._clock() - snap.now
+
+    def failed(self) -> dict:
+        """{rid: reason} for requests the engine gave up on (deadline
+        miss, max_restarts exceeded) — disjoint from ``results()``."""
+        return dict(self._failed)
 
     def _advance_decode(self, st, logits_row, now):
         """Sample one token for a decode-phase request and advance /
@@ -703,8 +1059,15 @@ class ServingEngine:
         self.stats.packed_decode_tokens += len(dec_rows)
         self.stats.packed_prefill_tokens += n_prefill
         self.stats.prefill_tokens += n_prefill
+        # ONE fused non-finite reduction over the tick's logits; only
+        # decode rows sample, so only they can quarantine
+        bad = (~np.isfinite(rows).all(axis=-1)
+               if self._nan_guard else None)
         for j, st in dec_rows:
-            self._advance_decode(st, rows[j], now)
+            if bad is not None and bad[j]:
+                self._quarantine(st)
+            else:
+                self._advance_decode(st, rows[j], now)
         for st, take in prefill:
             st.nprefilled += take
             if not st.prefilling:

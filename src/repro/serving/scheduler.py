@@ -64,6 +64,7 @@ class Request:
     sampling: SamplingParams = SamplingParams()
     arrival: float = 0.0             # absolute clock time of arrival
     priority: int = 0                # higher = more urgent; 0 = default
+    deadline: float | None = None    # absolute clock time; None = never
 
 
 class RequestState:
@@ -171,6 +172,12 @@ class EngineStats:
     spilled_pages: int = 0             # pages gathered device -> host
     restore_hits: int = 0              # resumes injected from the store
     restore_misses: int = 0            # resumes re-prefilled (entry lost)
+    restarts: int = 0                  # reset_for_refill invocations
+    deadline_miss: int = 0             # requests cancelled past deadline
+    deadline_miss_by_class: dict = field(default_factory=dict)
+    quarantined: int = 0               # non-finite decode rows caught
+    failed_requests: int = 0           # max_restarts / unrecoverable
+    faults_injected: int = 0           # chaos faults actually fired
     t_start: float | None = None
     t_end: float | None = None
 
@@ -209,6 +216,14 @@ class EngineStats:
             "spilled_pages": self.spilled_pages,
             "restore_hits": self.restore_hits,
             "restore_misses": self.restore_misses,
+            "restarts": self.restarts,
+            "deadline_miss": self.deadline_miss,
+            "deadline_miss_by_class": {
+                str(k): v for k, v
+                in sorted(self.deadline_miss_by_class.items())},
+            "quarantined": self.quarantined,
+            "failed_requests": self.failed_requests,
+            "faults_injected": self.faults_injected,
         }
 
 

@@ -150,6 +150,54 @@ def check(mode: str, chunk_len: int, *, ground_truth: bool = False,
               f"(preemptions={st6.preemptions} "
               f"spilled_pages={st6.spilled_pages} "
               f"restore_hits={st6.restore_hits})")
+
+    if paged and prefill_mode == "packed":
+        # kill-and-restore: run the engine to a mixed mid-flight moment
+        # (some slots decoding, some prefilling, >= 1 request spilled
+        # to the host store), journal it with snapshot(), TEAR THE
+        # ENGINE DOWN, and restore the journal into a fresh engine —
+        # which must finish the trace with tokens identical to the
+        # uninterrupted oracle's, in BOTH decode modes on the sharded
+        # (2,4) mesh (the prism kz/vz/gz/zsum state rows ride the same
+        # journalled gather the offload tier uses)
+        eng1 = ServingEngine(CFG, mesh, params, paged=True, offload=True,
+                             **kw)
+        for p in prompts[:4]:
+            eng1.submit(p, max_new_tokens=8)
+        for _ in range(200):
+            eng1.step()
+            act = list(eng1._sched.active.values())
+            dec = [st for st in act
+                   if not st.prefilling and st.generated
+                   and not st.finished()]
+            pref = [st for st in act if st.prefilling]
+            if len(dec) >= 2 and pref:
+                break
+        else:
+            raise AssertionError("no mixed prefill+decode moment")
+        for p in prompts[4:]:
+            eng1.submit(p, max_new_tokens=8)
+        assert eng1.preempt(dec[0].req.rid)       # >= 1 spilled
+        assert len(eng1.kv_store) == 1
+        snap = eng1.snapshot()
+        n_active = len(snap.active)
+        del eng1                                  # the crash
+
+        eng2 = ServingEngine(CFG, mesh, params, paged=True, offload=True,
+                             **kw)
+        eng2.restore(snap)
+        assert len(eng2._sched.active) == n_active
+        assert len(eng2.kv_store) == 1
+        restored = eng2.run()
+        match = restored == concurrent
+        ok &= match
+        ok &= eng2.stats.restore_misses == 0
+        ok &= eng2.stats.completed == 6 and len(eng2.kv_store) == 0
+        eng2.kv_cache.check()
+        print(f"[{tag}] kill-and-restore: "
+              f"{'OK' if match else 'MISMATCH'} "
+              f"(journalled {n_active} live slots + 1 spilled; "
+              f"restore_hits={eng2.stats.restore_hits})")
     return ok
 
 

@@ -611,6 +611,87 @@ def test_engine_cancel_waiting_request():
     assert queued not in out and sorted(out) == [0, 1]
 
 
+def test_engine_double_cancel_idempotent():
+    """cancel() is idempotent: the second call (and a cancel of an
+    unknown rid) returns False and leaves the bookkeeping intact."""
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    eng = _engine(params, _mesh(), offload=True, n_slots=2)
+    _submit_mix(eng, n=2)
+    queued = eng.submit((1, 2, 3), max_new_tokens=2)
+    eng.step()
+    assert eng.cancel(queued)
+    assert not eng.cancel(queued)              # double-cancel: no-op
+    assert not eng.cancel(999)                 # never submitted
+    eng.kv_cache.check()
+    out = eng.run()
+    assert sorted(out) == [0, 1]
+    assert eng.kv_cache.table.free_pages == eng.kv_cache.paging.n_pages
+
+
+def test_engine_cancel_while_spilled_then_recancel():
+    """Cancelling a spilled (resume-parked) request reclaims its store
+    entry; the second cancel returns False and nothing leaks."""
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    eng = _engine(params, _mesh(), offload=True)
+    _submit_mix(eng, n=2)
+    for _ in range(200):
+        st = eng._find_active(0)
+        if st is not None and len(st.generated) >= 1:
+            break
+        eng.step()
+    assert eng.preempt(0)
+    assert 0 in eng.kv_store
+    assert eng.cancel(0)                       # parked on the resume queue
+    assert 0 not in eng.kv_store               # store bytes reclaimed
+    assert not eng.cancel(0)                   # double-cancel: no-op
+    out = eng.run()
+    assert sorted(out) == [1]
+    eng.kv_cache.check()
+    assert eng.kv_cache.table.free_pages == eng.kv_cache.paging.n_pages
+    assert eng.kv_store.bytes_used == 0
+
+
+def test_engine_resume_after_cancel_returns_false():
+    """resume() of a cancelled (formerly suspended) session returns
+    False — the cancel won; no store entry, no ghost requeue."""
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    eng = _engine(params, _mesh(), offload=True)
+    _submit_mix(eng, n=2)
+    for _ in range(200):
+        st = eng._find_active(0)
+        if st is not None and len(st.generated) >= 1:
+            break
+        eng.step()
+    assert eng.suspend(0)
+    assert eng.cancel(0)                       # cancels the parked session
+    assert not eng.resume(0)                   # resume-after-cancel: no-op
+    assert not eng.suspend(0)                  # not active either
+    out = eng.run()
+    assert sorted(out) == [1]
+    assert len(eng.kv_store) == 0 and eng.kv_store.bytes_used == 0
+    eng.kv_cache.check()
+
+
+def test_engine_double_suspend_double_resume():
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    eng = _engine(params, _mesh(), offload=True)
+    _submit_mix(eng, n=2)
+    for _ in range(200):
+        st = eng._find_active(0)
+        if st is not None and len(st.generated) >= 1:
+            break
+        eng.step()
+    assert eng.suspend(0)
+    assert not eng.suspend(0)                  # already parked
+    assert eng.resume(0)
+    assert not eng.resume(0)                   # already requeued
+    out = eng.run()
+    assert sorted(out) == [0, 1]
+    assert len(eng.kv_store) == 0
+    eng.kv_cache.check()
+    assert eng.kv_cache.table.free_pages == eng.kv_cache.paging.n_pages
+
+
 def test_engine_config_offload_validation():
     with pytest.raises(ValueError, match="paged"):
         EngineConfig(n_slots=2, prefill_len=8, max_cache=16,
