@@ -24,7 +24,10 @@ Gates (exit 1 on any failure):
     vs OFF and must not worsen the interactive class's TTFT (PR-7);
     under seeded all-kinds fault injection (PR-8 chaos soak, 3 seeds)
     every completed request must be token-identical to the clean run
-    and the drained engine must audit leak-free;
+    and the drained engine must audit leak-free; the async streaming
+    loop (PR-9) must stream token-identical output to the synchronous
+    engine on the identical trace, and its wall-clock host-overhead
+    fraction must stay under a coarse 0.9 ceiling (device-bound loop);
   * throughput — the engine's logical-clock requests-per-kstep (packed
     and chunked, main trace) may not regress more than ``--tolerance``
     (default 20%) vs the committed baseline.  The logical clock runs
@@ -143,6 +146,21 @@ def compare(decode_base, decode_cur, engine_base, engine_cur,
          "each chaos seed injected > 0 faults and completed > 0 "
          "requests")
 
+    # -- async streaming loop: structural ------------------------------
+    gate("engine/stream_token_match",
+         eg.get("stream_token_match", False),
+         "double-buffered streaming delivers exactly the synchronous "
+         "engine's tokens on the identical main trace, every stream "
+         "closed with a finish reason")
+    gate("engine/stream_overlap_ran",
+         eg.get("stream_overlap_ran", False),
+         "the overlapped loop actually dispatched packed ticks")
+    gate("engine/host_overhead_fraction",
+         0.0 <= eg.get("host_overhead_fraction", 1.0) < 0.9,
+         f"worst overlap-on host-overhead fraction="
+         f"{eg.get('host_overhead_fraction', 1.0):.3f} (wall clock; "
+         "coarse ceiling 0.9 — the loop must stay device-bound)")
+
     # -- engine bench: logical-clock throughput vs baseline ------------
     for mode in ("packed", "chunked"):
         cur = engine_cur["traces"]["main"][mode]["requests_per_ksteps"]
@@ -170,8 +188,20 @@ def compare(decode_base, decode_cur, engine_base, engine_cur,
             "current": decode_cur.get("prism_concat_free_speedup"),
             "baseline": decode_base.get("prism_concat_free_speedup")},
     }
+    # streaming wall-clock sweep: reported per offered load, never
+    # gated beyond the coarse host-overhead ceiling above (TTFT/ITL in
+    # wall seconds are CI-hardware-dependent)
+    stream_wall = {}
+    for rate_name, w in (engine_cur.get("traces", {})
+                         .get("stream", {}).get("wall", {})).items():
+        b = (engine_base.get("traces", {}).get("stream", {})
+             .get("wall", {})).get(rate_name, {})
+        stream_wall[rate_name] = {
+            key: {"current": w.get(key), "baseline": b.get(key)}
+            for key in ("overlap_on", "overlap_off")}
     return {"ok": all(g["ok"] for g in gates), "tolerance": tolerance,
             "gates": gates, "wall_ungated": wall,
+            "stream_wall_ungated": stream_wall,
             "microbench_ungated": speed}
 
 

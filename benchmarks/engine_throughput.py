@@ -40,6 +40,17 @@ the code + trace seed.  Measured wall-clock per step kind is reported
 alongside for the wall-time conversions, but nothing gated depends on
 it.
 
+The ``stream`` section (PR 9) measures the async streaming loop
+(``serving/streaming.py``) both ways: ``stream_token_match`` drives the
+double-buffered engine on the logical clock over the identical main
+trace and requires token-identical streams, and the wall-clock sweep
+(``run_stream_wall``) replays a Poisson trace at three offered loads
+with overlap on vs off on REAL time — TTFT/ITL percentiles in seconds
+plus ``host_overhead_fraction``, the host-bookkeeping share of the
+loop's non-idle wall time (docs/streaming.md defines the measurement
+model).  The wall numbers are hardware-dependent and only
+coarse-gated (fraction < 0.9); token identity is gated exactly.
+
 Run standalone (writes the ``BENCH_engine.json`` artifact)::
 
     PYTHONPATH=src python -m benchmarks.engine_throughput \
@@ -112,7 +123,7 @@ def prefill_flops_per_request(cfg, plens, mode: str) -> float:
 
 def build_engine(mode: str, *, prefix_cache: bool | None = None,
                  offload: bool = False, n_pages: int | None = None,
-                 faults=None, max_restarts: int = 3):
+                 faults=None, max_restarts: int = 3, wall: bool = False):
     import jax
     from repro.models import transformer as T
     from repro.runtime.serve import ServeHParams
@@ -121,7 +132,9 @@ def build_engine(mode: str, *, prefix_cache: bool | None = None,
     cfg = bench_config()
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     params = T.init(cfg, jax.random.PRNGKey(0))
-    clock = StepClock()
+    # wall=True keeps the engine on real time (time.monotonic) — the
+    # streaming wall-clock mode measures seconds, not decode-steps
+    clock = time.monotonic if wall else StepClock()
     prefill_mode = {"packed": "packed", "padded": "padded"}.get(
         mode, "chunked")
     ecfg = EngineConfig(
@@ -372,6 +385,110 @@ def run_chaos(trace, clean_toks, *, seed: int) -> dict:
     }
 
 
+def run_stream_match(trace, sync_toks, costs) -> dict:
+    """Streamed ≡ synchronous tokens on the identical trace.  Drives a
+    ``StreamingEngine`` (overlap ON, depth 2) on the same logical
+    StepClock ``run_trace`` uses; greedy per-request seeded sampling
+    makes tokens scheduling-independent, so every stream must deliver
+    exactly the sync packed engine's token list — the
+    ``stream_token_match`` gate."""
+    from repro.serving import EngineStats, SamplingParams, StreamingEngine
+    from .common import packed_step_flops
+
+    eng, clock, cfg = build_engine("packed")
+    seng = StreamingEngine(eng, overlap=True)
+    eng.submit(list(range(1, 20)), max_new_tokens=2)
+    eng.submit([1, 2, 3], max_new_tokens=2)
+    seng.run_sync()                    # compile warmup, as in run_trace
+    eng.stats = EngineStats(n_slots=eng.n_slots)
+
+    t0_trace = clock.t
+    streams = {}
+    for i, item in enumerate(trace):
+        arrival, prompt, gen = item[0], item[1], item[2]
+        _, streams[i] = seng.submit_stream(
+            prompt, max_new_tokens=gen, sampling=SamplingParams(seed=i),
+            arrival=t0_trace + arrival,
+            priority=item[3] if len(item) > 3 else 0)
+    # the clock charges device work at DISPATCH (that is when the
+    # program is enqueued); reconcile-only iterations are free — they
+    # overlap the next tick's compute
+    while seng.has_work:
+        d0 = eng.stats.packed_decode_tokens
+        p0 = eng.stats.packed_prefill_tokens
+        kind = seng.step()
+        if kind == "packed":
+            clock.t += packed_step_flops(
+                cfg,
+                decode_tokens=eng.stats.packed_decode_tokens - d0,
+                prefill_tokens=eng.stats.packed_prefill_tokens - p0,
+                m_decode=MAX_CACHE,
+                m_prefill=PREFILL_LEN) / costs["decode_flops"]
+        elif kind == "decode":
+            clock.t += costs["decode"]
+        elif kind == "idle" and eng._pending:
+            clock.t += max(0.0, eng.next_arrival() - eng.now())
+    streamed = {i: streams[i].drain() for i in range(len(trace))}
+    finished = {i: streams[i].finished for i in range(len(trace))}
+    s = eng.stats.summary()
+    return {
+        "token_match": all(streamed[i] == sync_toks[i]
+                           for i in range(len(trace))),
+        "all_finished": all(f is not None for f in finished.values()),
+        "tokens_streamed": s["tokens_streamed"],
+        "packed_ticks": s["packed_ticks"],
+        "decode_steps": s["decode_steps"],
+        "ticks_idle": s["ticks_idle"],
+    }
+
+
+def run_stream_wall(trace, *, overlap: bool) -> dict:
+    """Wall-clock streaming measurement: the SAME trace on real time
+    (arrivals in seconds), TTFT/ITL percentiles in wall seconds, and
+    the host-overhead fraction — host bookkeeping seconds over the
+    loop's non-idle wall seconds, the number double-buffering exists to
+    shrink (docs/streaming.md defines the measurement model).  Run with
+    overlap on and off for the A/B the EXPERIMENTS entry reports."""
+    import numpy as np
+    from repro.serving import EngineStats, SamplingParams, StreamingEngine
+
+    eng, _, cfg = build_engine("packed", wall=True)
+    seng = StreamingEngine(eng, overlap=overlap)
+    eng.submit(list(range(1, 20)), max_new_tokens=2)
+    eng.submit([1, 2, 3], max_new_tokens=2)
+    seng.run_sync()                    # compile warmup, unmeasured
+    eng.stats = EngineStats(n_slots=eng.n_slots)
+
+    t0 = eng.now()
+    streams = {}
+    for i, item in enumerate(trace):
+        arrival, prompt, gen = item[0], item[1], item[2]
+        _, streams[i] = seng.submit_stream(
+            prompt, max_new_tokens=gen, sampling=SamplingParams(seed=i),
+            arrival=t0 + arrival)
+    w0 = time.perf_counter()
+    seng.run_sync()
+    wall_s = time.perf_counter() - w0
+    itl = [dt for ds in seng.itl_samples().values() for dt in ds]
+    s = eng.stats.summary()
+    pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+    return {
+        "overlap": overlap,
+        "requests": len(trace),
+        "wall_s": wall_s,
+        "decode_tokens_per_s": (eng.stats.generated_tokens / wall_s
+                                if wall_s > 0 else 0.0),
+        "ttft_p50_s": s["ttft_p50_s"],
+        "ttft_p99_s": s["ttft_p99_s"],
+        "itl_p50_s": pct(itl, 50),
+        "itl_p99_s": pct(itl, 99),
+        "host_overhead_fraction": s["host_overhead_fraction"],
+        "ticks": s["packed_ticks"] + s["decode_steps"],
+        "ticks_idle": s["ticks_idle"],
+        "tokens_streamed": s["tokens_streamed"],
+    }
+
+
 def packed_cache_sized_concats() -> int:
     """Structural proof that the packed program never materializes a
     cache-sized concatenate: walk the traced jaxpr (same technique as
@@ -484,6 +601,23 @@ def run_all() -> dict:
     for seed in (0, 1, 2):
         res["chaos"][f"seed{seed}"] = run_chaos(
             overload_trace, toks["overload"]["preempt_on"], seed=seed)
+
+    # streaming: token identity vs the sync packed run on the identical
+    # main trace (logical clock), then the wall-clock load sweep —
+    # offered load rises low -> high; TTFT/ITL tails and the idle-tick
+    # count locate the saturation knee, host_overhead_fraction is the
+    # overlap-efficiency number the compare gate bounds
+    res["stream"] = {"match": run_stream_match(
+        main_trace, toks["main"]["packed"], costs)}
+    res["stream"]["wall"] = {}
+    for rate_name, gap in (("low", 0.10), ("mid", 0.02),
+                           ("high", 0.004)):
+        wtrace = make_trace(cfg, n_requests=10, arrival_gap=gap,
+                            plen_range=(8, 33), gen_range=(8, 25),
+                            seed=5)
+        res["stream"]["wall"][rate_name] = {
+            "overlap_on": run_stream_wall(wtrace, overlap=True),
+            "overlap_off": run_stream_wall(wtrace, overlap=False)}
 
     flops = {}
     for trace_name, trace in (("main", main_trace),
@@ -599,6 +733,22 @@ def run_all() -> dict:
         "chaos_faults_fired": all(
             c["faults_injected"] > 0 and c["completed"] > 0
             for c in res["chaos"].values()),
+        # ---- streaming gates -----------------------------------------
+        # the overlapped double-buffered loop must deliver EXACTLY the
+        # synchronous engine's tokens on the identical trace, and every
+        # stream must close with a finish reason
+        "stream_token_match": (res["stream"]["match"]["token_match"]
+                               and res["stream"]["match"]["all_finished"]),
+        "stream_overlap_ran": res["stream"]["match"]["packed_ticks"] > 0,
+        # host bookkeeping share of the wall loop, worst overlap-on run
+        # — a generous ceiling (the loop must be device-bound, not
+        # host-bound; exact values vary with CI hardware)
+        "host_overhead_fraction": max(
+            w["overlap_on"]["host_overhead_fraction"]
+            for w in res["stream"]["wall"].values()),
+        "host_overhead_ok": all(
+            0.0 <= w["overlap_on"]["host_overhead_fraction"] < 0.9
+            for w in res["stream"]["wall"].values()),
     }
     return {
         "bench": "engine_throughput",
@@ -669,6 +819,22 @@ def main(report):
         report(f"engine/overload/{name}/preemptions", 0.0,
                f"{s['preemptions']} (spilled {s['spilled_pages']} pages, "
                f"{s['restore_hits']} restores)")
+    m = res["stream"]["match"]
+    report("engine/stream/token_match", 0.0,
+           f"{m['token_match']} ({m['tokens_streamed']} streamed over "
+           f"{m['packed_ticks']} packed + {m['decode_steps']} decode "
+           "ticks)")
+    for rate_name, w in res["stream"]["wall"].items():
+        for key in ("overlap_on", "overlap_off"):
+            s = w[key]
+            report(f"engine/stream/{rate_name}/{key}", s["wall_s"] * 1e6,
+                   f"ttft p50 {s['ttft_p50_s'] * 1e3:.1f}ms "
+                   f"p99 {s['ttft_p99_s'] * 1e3:.1f}ms, "
+                   f"itl p50 {s['itl_p50_s'] * 1e3:.1f}ms "
+                   f"p99 {s['itl_p99_s'] * 1e3:.1f}ms, "
+                   f"{s['decode_tokens_per_s']:.0f} tok/s, "
+                   f"host {100 * s['host_overhead_fraction']:.1f}% "
+                   f"({s['ticks']} ticks, {s['ticks_idle']} idle)")
     g = payload["gates"]
     for gate in ("short_prefill_flops_lower", "short_ttft_no_worse",
                  "chunked_vs_padded_ttft_no_worse", "packed_token_match",
@@ -678,8 +844,12 @@ def main(report):
                  "prefix_ttft_no_worse", "preempt_token_match",
                  "preempt_fired", "preempt_ttft_no_worse",
                  "chaos_token_match", "chaos_zero_leak",
-                 "chaos_faults_fired"):
+                 "chaos_faults_fired", "stream_token_match",
+                 "stream_overlap_ran", "host_overhead_ok"):
         report(f"engine/gate/{gate}", 0.0, str(g[gate]))
+    report("engine/stream/host_overhead_fraction", 0.0,
+           f"{100 * g['host_overhead_fraction']:.1f}% (worst overlap-on "
+           "run)")
     report("engine/preempt_interactive_ttft_speedup", 0.0,
            f"x{g['preempt_interactive_ttft_speedup']:.2f}")
     report("engine/prefix_reuse_savings", 0.0,
@@ -724,5 +894,6 @@ if __name__ == "__main__":
             and g["preempt_token_match"] and g["preempt_fired"]
             and g["preempt_ttft_no_worse"]
             and g["chaos_token_match"] and g["chaos_zero_leak"]
-            and g["chaos_faults_fired"]):
+            and g["chaos_faults_fired"] and g["stream_token_match"]
+            and g["stream_overlap_ran"] and g["host_overhead_ok"]):
         sys.exit(1)

@@ -80,6 +80,15 @@ def main():
                     help="[engine] priority classes in the synthetic "
                          "trace — each request draws uniform [0, CLASSES)"
                          " (higher = more urgent; 1 = plain FIFO)")
+    ap.add_argument("--stream", action="store_true",
+                    help="[engine] asyncio streaming front-end: tokens "
+                         "stream per request while the double-buffered "
+                         "loop overlaps host and device work "
+                         "(docs/streaming.md)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="[engine, stream] disable double-buffered "
+                         "dispatch (synchronous ticks; tokens still "
+                         "stream) — the A/B baseline for the overlap win")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="[engine] seeded fault injection: run the "
                          "trace under FaultPlan.chaos(SEED) — store "
@@ -135,27 +144,75 @@ def main():
             offload=args.offload, faults=faults,
             max_restarts=8 if faults is not None else 3)
         eng = ServingEngine(cfg, mesh, params, ecfg)
+        seng = None
+        if args.stream:
+            from repro.serving import StreamingEngine
+            seng = StreamingEngine(eng, overlap=not args.no_overlap)
         rng = np.random.default_rng(0)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
                                              size=args.requests))
+        streams = {}
         for i in range(args.requests):
             plen = int(rng.integers(max(1, n // 2), n + 1))
             prompt = rng.integers(1, cfg.vocab_size, size=plen)
-            eng.submit(prompt, max_new_tokens=args.gen,
-                       sampling=SamplingParams(temperature=args.temperature,
-                                               top_k=args.top_k, seed=i),
-                       arrival=float(arrivals[i]),
-                       priority=int(rng.integers(0, max(1, args.priority))))
+            kw = dict(max_new_tokens=args.gen,
+                      sampling=SamplingParams(temperature=args.temperature,
+                                              top_k=args.top_k, seed=i),
+                      arrival=float(arrivals[i]),
+                      priority=int(rng.integers(0, max(1, args.priority))))
+            if seng is not None:
+                rid, stream = seng.submit_stream(prompt, **kw)
+                streams[rid] = stream
+            else:
+                eng.submit(prompt, **kw)
         mode = "gang (static)" if args.gang else "continuous"
         extras = (f", {args.priority} priority classes"
                   if args.priority > 1 else "")
         extras += ", host offload" if args.offload else ""
         extras += (f", chaos seed {args.chaos}"
                    if args.chaos is not None else "")
+        extras += (", streaming" + (" (overlap off)" if args.no_overlap
+                                    else " (overlap)")
+                   if args.stream else "")
         print(f"[engine] {args.requests} requests, Poisson rate "
               f"{args.rate}/s, {args.batch} slots, {mode} admission"
               f"{extras}")
-        eng.run()
+        if seng is not None:
+            import asyncio
+
+            async def _drive():
+                loop = asyncio.get_running_loop()
+                got = {}
+
+                async def consume(rid, stream):
+                    toks = []
+                    async for t in stream:
+                        toks.append(t)
+                    got[rid] = (toks, stream.finished)
+
+                tasks = [asyncio.ensure_future(consume(rid, s))
+                         for rid, s in streams.items()]
+                while seng.has_work:
+                    kind = await loop.run_in_executor(None, seng.step)
+                    if kind == "idle":
+                        await asyncio.sleep(0.002)
+                seng.drain()
+                seng._flush_streams()
+                await asyncio.gather(*tasks)
+                return got
+
+            got = asyncio.run(_drive())
+            fins = {}
+            for toks, fin in got.values():
+                fins[fin] = fins.get(fin, 0) + 1
+            print(f"[stream] {len(got)} streams closed: "
+                  + ", ".join(f"{k}={v}" for k, v in sorted(fins.items())))
+            itl = [dt for ds in seng.itl_samples().values() for dt in ds]
+            if itl:
+                print(f"[stream] itl_p50_s {float(np.percentile(itl, 50)):.4f}"
+                      f"  itl_p99_s {float(np.percentile(itl, 99)):.4f}")
+        else:
+            eng.run()
         for k, v in eng.stats.summary().items():
             print(f"[engine] {k:22s} {v:.3f}"
                   if isinstance(v, float) else f"[engine] {k:22s} {v}")

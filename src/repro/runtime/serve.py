@@ -2013,3 +2013,59 @@ def make_packed_step(cfg: ModelConfig, mesh, params, *,
         donate_argnums=(1,),
     )
     return jitted, lay, rules, lspec
+
+
+def make_result_pack(n_slots: int):
+    """Device-side result packing for the streaming engine
+    (JetStream's ``ResultTokens`` idiom): build the ONE small device
+    array a tick sends home, plus the merge that feeds the previous
+    in-flight tick's on-device samples into the next tick's token
+    batch.  Returns ``(pack, merge)``:
+
+    * ``pack(logits (L, V), row_slot (L,) i32, is_decode (L,) i32,
+      lengths (n_slots,) i32) -> data (n_slots, 4) i32`` — per-slot
+      rows ``[token, valid, length, finite]``.  ``token`` is the
+      greedy argmax of the slot's decode logits row this tick
+      (first-max tie break — bit-identical to the host ``np.argmax``
+      the synchronous engine samples with), ``valid`` is 1 iff the
+      slot decoded this tick, ``length`` is the host-supplied cache
+      length after the row, and ``finite`` is 0 iff the row held a
+      non-finite logit (the NaN-quarantine trigger, reduced on device
+      so the host copy stays one small array instead of (B, V)
+      logits).  Slots without a decode row come back ``[0, 0, length,
+      1]``.
+    * ``merge(tok_host (T,) i32, src (T,) i32, prev (n_slots, 4) i32)
+      -> (T,) i32`` — the double-buffer splice: entry ``i`` takes
+      ``prev[src[i], 0]`` (the previous tick's sampled token for that
+      slot, still device-resident) when ``src[i] >= 0``, else the
+      host-planned ``tok_host[i]`` (prefill tokens, rewind re-feeds,
+      and the first decode row after a reconciled tick).
+
+    Both are ``jax.jit`` closures over plain ``jnp`` — logits arrive
+    with whatever sharding the step program produced and GSPMD places
+    the argmax/reduction accordingly.  Non-decode rows scatter to the
+    out-of-bounds index ``n_slots`` and are dropped (``mode='drop'``,
+    the same contract the paged pool's scatter writes rely on), so a
+    ragged tick never corrupts a neighbouring slot's entry.
+    """
+    S = n_slots
+
+    @jax.jit
+    def pack(logits, row_slot, is_decode, lengths):
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        fin = jnp.isfinite(logits).all(axis=-1)
+        idx = jnp.where(is_decode > 0, row_slot, S)
+        zeros = jnp.zeros((S,), jnp.int32)
+        tok_s = zeros.at[idx].set(tok, mode="drop")
+        val_s = zeros.at[idx].set(1, mode="drop")
+        fin_s = jnp.ones((S,), jnp.int32).at[idx].set(
+            fin.astype(jnp.int32), mode="drop")
+        return jnp.stack(
+            [tok_s, val_s, lengths.astype(jnp.int32), fin_s], axis=1)
+
+    @jax.jit
+    def merge(tok_host, src, prev):
+        pick = prev[:, 0][jnp.clip(src, 0, S - 1)]
+        return jnp.where(src >= 0, pick, tok_host)
+
+    return pack, merge

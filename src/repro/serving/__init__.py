@@ -1,12 +1,16 @@
 """Request-level serving: continuous batching over the sequence-sharded
-decode runtime (docs/serving.md)."""
+decode runtime (docs/serving.md), plus the overlapped async streaming
+front-end (docs/streaming.md)."""
 from ..runtime.faults import FaultInjector, FaultPlan, FaultSpec
 from ..runtime.offload import KVStore, SpilledEntry
 from .sampling import SamplingParams, sample_token
 from .scheduler import Request, RequestState, FifoScheduler, EngineStats
 from .engine import EngineConfig, EngineSnapshot, ServingEngine
+from .streaming import (ResultTokens, StreamingEngine, TokenStream,
+                        serve_stream)
 
 __all__ = ["SamplingParams", "sample_token", "Request", "RequestState",
            "FifoScheduler", "EngineStats", "EngineConfig",
            "EngineSnapshot", "ServingEngine", "KVStore", "SpilledEntry",
-           "FaultInjector", "FaultPlan", "FaultSpec"]
+           "FaultInjector", "FaultPlan", "FaultSpec", "ResultTokens",
+           "StreamingEngine", "TokenStream", "serve_stream"]

@@ -460,6 +460,8 @@ class ServingEngine:
         through to the plain decode program — both programs live in the
         compiled-program cache, so alternating kinds never retrace."""
         kind = self._step_inner()
+        if kind == "idle":
+            self.stats.ticks_idle += 1
         if self._injector is not None:
             self.stats.faults_injected = self._injector.total_injected
         return kind
@@ -877,21 +879,43 @@ class ServingEngine:
         return True
 
     def cancel(self, rid: int) -> bool:
-        """Drop a request that is not in a slot: pending (future
-        arrival), queued, parked for resume, or suspended.  Frees its
-        store entry if one exists.  Active requests cannot be cancelled
-        mid-flight (ROADMAP item 3)."""
+        """Drop a request wherever it sits in the lifecycle: pending
+        (future arrival), queued, parked for resume, suspended, or
+        ACTIVE (prefilling or decoding mid-flight).  Each path reclaims
+        exactly what that state holds — heap entry, queue position,
+        store bytes, or bound pages + state row + slot (the same
+        zero-leak release the deadline sweep uses; the prompt is never
+        prefix-registered, since a cancelled request may hold a
+        partially-prefilled page set).  A cancelled request lands in
+        ``failed()`` under reason ``'cancelled'`` and never reaches
+        ``results()``.  Callers driving the engine through the
+        streaming front-end must cancel via ``StreamingEngine.cancel``,
+        which drains the in-flight tick pipeline first."""
         for i, (_, r, req) in enumerate(self._pending):
             if r == rid:
                 self._pending.pop(i)
                 heapq.heapify(self._pending)
+                self.stats.cancelled += 1
                 return True
         if self._sched.cancel(rid) is not None:
             if self._store is not None:
                 self._store.drop(rid)
+            self.stats.cancelled += 1
             return True
         if self._suspended.pop(rid, None) is not None:
             self._store.drop(rid)
+            self.stats.cancelled += 1
+            return True
+        st = self._find_active(rid)
+        if st is not None:
+            if self._paged:
+                self._kv.free(st.slot, None)
+            else:
+                self._kv.reset_row(st.slot)
+            self._sched.remove(st)
+            st.t_finish = self.now()
+            self._failed[rid] = "cancelled"
+            self.stats.cancelled += 1
             return True
         return False
 
@@ -995,6 +1019,16 @@ class ServingEngine:
         """Sample one token for a decode-phase request and advance /
         evict it — shared by the decode step and the packed tick."""
         t = sample_token(logits_row, st.req.sampling, st.rng)
+        self._advance_token(st, t, now)
+
+    def _advance_token(self, st, t: int, now):
+        """Advance a decode-phase request by one ALREADY-SAMPLED token
+        (append, TTFT, position, finish/evict).  The sync tick loop
+        reaches it through ``_advance_decode`` (host sampling); the
+        streaming engine calls it directly with the device-argmaxed
+        token carried home in the tick's ``ResultTokens`` — identical
+        state transitions either way, which is what keeps streamed
+        output token-identical to the synchronous engine."""
         st.generated.append(t)
         self.stats.generated_tokens += 1
         if st.ttft is None:

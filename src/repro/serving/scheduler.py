@@ -83,7 +83,7 @@ class RequestState:
     """
     __slots__ = ("req", "slot", "pos", "next_token", "nprefilled",
                  "generated", "rng", "t_admit", "ttft", "t_finish",
-                 "restarts")
+                 "restarts", "epoch", "inflight")
 
     def __init__(self, req: Request, slot: int, t_admit: float):
         self.req = req
@@ -97,6 +97,10 @@ class RequestState:
         self.ttft = None
         self.t_finish = None
         self.restarts = 0              # re-prefills after a lost restore
+        self.epoch = 0                 # bumped on every rewind-to-zero;
+        # the streaming engine stamps in-flight rows with it so results
+        # that raced a quarantine/restart reconcile as stale
+        self.inflight = 0              # dispatched, not-yet-reconciled rows
 
     @property
     def prefilling(self) -> bool:
@@ -122,6 +126,7 @@ class RequestState:
         self.generated = []
         self.rng = self.req.sampling.make_rng()
         self.restarts += 1
+        self.epoch += 1                # invalidate in-flight rows
 
     def begin_decode(self):
         """Prefill done — rewind to the last prompt token and decode."""
@@ -178,6 +183,11 @@ class EngineStats:
     quarantined: int = 0               # non-finite decode rows caught
     failed_requests: int = 0           # max_restarts / unrecoverable
     faults_injected: int = 0           # chaos faults actually fired
+    cancelled: int = 0                 # requests cancelled by the caller
+    ticks_idle: int = 0                # step() calls that found no work
+    tokens_streamed: int = 0           # tokens delivered to TokenStreams
+    host_busy_s: float = 0.0           # host-side bookkeeping (streaming)
+    loop_wall_s: float = 0.0           # total non-idle streaming wall time
     t_start: float | None = None
     t_end: float | None = None
 
@@ -224,6 +234,14 @@ class EngineStats:
             "quarantined": self.quarantined,
             "failed_requests": self.failed_requests,
             "faults_injected": self.faults_injected,
+            "cancelled": self.cancelled,
+            "ticks_idle": self.ticks_idle,
+            "tokens_streamed": self.tokens_streamed,
+            # host-side bookkeeping share of the streaming loop's wall
+            # time (0 when the engine never ran the streaming loop) —
+            # the overlap-efficiency number docs/streaming.md defines
+            "host_overhead_fraction": (self.host_busy_s / self.loop_wall_s
+                                       if self.loop_wall_s > 0 else 0.0),
         }
 
 
@@ -459,8 +477,9 @@ class FifoScheduler:
     def cancel(self, rid: int):
         """Remove a not-yet-active request (queued fresh or parked for
         resume) by rid.  Returns the removed Request/RequestState, or
-        None if the rid is not waiting here (active requests cannot be
-        cancelled mid-flight — ROADMAP item 3)."""
+        None if the rid is not waiting here.  Active requests are
+        cancelled by the engine (``ServingEngine.cancel`` frees their
+        pages/slot); this method only covers the queued states."""
         for q in self.queues.values():
             for req in q:
                 if req.rid == rid:

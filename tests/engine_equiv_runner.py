@@ -20,6 +20,12 @@ The (2,4) mesh matters doubly for packed mode: the cache batch dim is
 sharded over 'data', so packed tokens must route their writes/reads to
 the one (batch, sequence) shard pair owning their cache address — the
 replicated-token, psum-over-all-axes path this runner pins.
+
+The packed cells additionally pin the async streaming loop
+(``serving/streaming.py``): the double-buffered engine — device-side
+argmax, speculative next-tick dispatch, single ``ResultTokens`` copy
+home per tick — must stream exactly the synchronous engine's tokens on
+the same sharded mesh, in exact AND prism decode modes.
 """
 import os
 import sys
@@ -97,6 +103,35 @@ def check(mode: str, chunk_len: int, *, ground_truth: bool = False,
           f"packed_ticks={s['packed_ticks']} "
           f"prefill_tokens={s['prefill_tokens']} "
           f"decode_steps={s['decode_steps']}")
+
+    if prefill_mode == "packed" and paged:
+        # streamed ≡ sync on the sharded mesh: the double-buffered
+        # overlapped streaming loop (serving/streaming.py) replays the
+        # same staggered trace — the device-side argmax carried home in
+        # each tick's ResultTokens array must reproduce the synchronous
+        # engine's host-sampled tokens bit-for-bit, per stream, in BOTH
+        # decode modes (the merge/pack programs run under the same
+        # GSPMD partitioning as the packed tick itself)
+        from repro.serving import StreamingEngine
+        eng_s = ServingEngine(CFG, mesh, params, paged=True, **kw)
+        seng = StreamingEngine(eng_s, overlap=True)
+        streams = []
+        for p in prompts[:4]:
+            streams.append(seng.submit_stream(p, max_new_tokens=8)[1])
+        for _ in range(4):                   # stagger, as in the oracle
+            seng.step()
+        for p in prompts[4:]:
+            streams.append(seng.submit_stream(p, max_new_tokens=8)[1])
+        streamed = seng.run_sync()
+        match = streamed == concurrent
+        ok &= match
+        ok &= all(streams[i].drain() == concurrent[i] for i in range(6))
+        ok &= (eng_s.stats.tokens_streamed
+               == sum(len(v) for v in concurrent.values()))
+        print(f"[{tag}] streamed-vs-sync: "
+              f"{'OK' if match else 'MISMATCH'} "
+              f"(tokens_streamed={eng_s.stats.tokens_streamed}, "
+              f"ticks_idle={eng_s.stats.ticks_idle})")
 
     if ground_truth:
         # exact mode only: pin against teacher-forced full forward

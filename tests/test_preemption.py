@@ -600,15 +600,25 @@ def test_engine_suspend_resume_idle_session():
 
 
 def test_engine_cancel_waiting_request():
+    """cancel() reaches every lifecycle state — including ACTIVE
+    mid-flight (PR-9: the streaming front-end cancels decoding
+    requests through this path).  The queued victim vanishes, the
+    active victim releases its slot/pages zero-leak and lands in
+    failed(), and the survivor finishes untouched."""
     params = T.init(TINY, jax.random.PRNGKey(0))
     eng = _engine(params, _mesh(), offload=True, n_slots=2)
     _submit_mix(eng, n=2)
     queued = eng.submit((1, 2, 3), max_new_tokens=2)    # no free slot yet
     eng.step()
     assert eng.cancel(queued)
-    assert not eng.cancel(0)                   # active: not cancellable
+    assert eng.cancel(0)                       # active: cancellable
+    assert eng.failed()[0] == "cancelled"
     out = eng.run()
-    assert queued not in out and sorted(out) == [0, 1]
+    assert queued not in out and sorted(out) == [1]
+    assert eng.stats.cancelled == 2
+    eng.kv_cache.check()
+    assert (eng.kv_cache.table.free_pages
+            == eng.kv_cache.paging.n_pages)
 
 
 def test_engine_double_cancel_idempotent():
