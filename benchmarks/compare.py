@@ -28,6 +28,10 @@ Gates (exit 1 on any failure):
     loop (PR-9) must stream token-identical output to the synchronous
     engine on the identical trace, and its wall-clock host-overhead
     fraction must stay under a coarse 0.9 ceiling (device-bound loop);
+    on the degraded-mesh trace (PR-10) a scheduled shard loss must keep
+    every stream finite through the Segment-Means substitution window,
+    audit leak-free after recovery, and finish token-identical to the
+    clean run;
   * throughput — the engine's logical-clock requests-per-kstep (packed
     and chunked, main trace) may not regress more than ``--tolerance``
     (default 20%) vs the committed baseline.  The logical clock runs
@@ -145,6 +149,24 @@ def compare(decode_base, decode_cur, engine_base, engine_cur,
          eg.get("chaos_faults_fired", False),
          "each chaos seed injected > 0 faults and completed > 0 "
          "requests")
+
+    # -- degraded-mesh serving (shard loss): structural ----------------
+    deg = engine_cur.get("traces", {}).get("degraded", {})
+    gate("engine/degraded_streams_finite",
+         eg.get("degraded_streams_finite", False),
+         "every stream crossing the shard-loss window closed with "
+         "exactly its requested finite token count (Segment-Means "
+         "replicas carried the degraded ticks)")
+    gate("engine/degraded_zero_leak",
+         eg.get("degraded_zero_leak", False),
+         "pages/state rows/slots all reclaimed after the shard-loss "
+         "recovery drain")
+    gate("engine/degraded_recovery_token_match",
+         eg.get("degraded_recovery_token_match", False),
+         f"post-recovery results token-identical to the clean run "
+         f"(shard_lost={deg.get('shard_lost', 0)}, "
+         f"degraded_ticks={deg.get('degraded_ticks', 0)}, "
+         f"restarts={deg.get('restarts', 0)})")
 
     # -- async streaming loop: structural ------------------------------
     gate("engine/stream_token_match",

@@ -385,6 +385,93 @@ def run_chaos(trace, clean_toks, *, seed: int) -> dict:
     }
 
 
+def run_degraded(trace) -> dict:
+    """Degraded-availability trace: the packed streaming engine with a
+    SCHEDULED ``shard_loss`` fault — the (bench mesh's only) sequence
+    shard dies mid-decode, so the degraded window serves entirely from
+    the Segment-Means standby replicas before the deterministic
+    re-prefill recovery.  Returns the verdicts behind the three
+    compare.py gates:
+
+      * ``streams_finite``: every stream closed with exactly its
+        requested token count, all finite (the degraded window never
+        leaks a NaN or stalls a stream);
+      * ``zero_leak``: the drained engine audits clean;
+      * ``recovery_token_match``: every request — the ones rewound by
+        recovery AND the ones admitted after it — finished
+        token-identical to the clean run, with the degraded window
+        actually observed (``shard_lost``/``degraded_ticks`` >= 1)."""
+    from repro.runtime.faults import FaultSpec
+    from repro.serving import (FaultPlan, SamplingParams,
+                               StreamingEngine)
+
+    def drive_sync(eng, clock, step):
+        for _ in range(200_000):
+            kind = step()
+            if kind != "idle":
+                clock.t += 1.0
+            elif eng._sched.has_work:
+                clock.t += 1.0
+            elif eng._pending:
+                clock.t += max(1.0, eng.next_arrival() - eng.now())
+            else:
+                return
+        raise RuntimeError("degraded trace did not drain")
+
+    clean, clock, cfg = build_engine("packed", prefix_cache=False)
+    for i, (arrival, prompt, gen) in enumerate(trace):
+        clean.submit(prompt, max_new_tokens=gen,
+                     sampling=SamplingParams(seed=i), arrival=arrival)
+    drive_sync(clean, clock, clean.step)
+    clean_toks = clean.results()
+
+    plan = FaultPlan(shard_loss=FaultSpec(at=(12,), shard=0))
+    eng, clock, cfg = build_engine("packed", prefix_cache=False,
+                                   faults=plan, max_restarts=8)
+    seng = StreamingEngine(eng)         # injector forces sync ticks
+    streams = {}
+    for i, (arrival, prompt, gen) in enumerate(trace):
+        _, streams[i] = seng.submit_stream(
+            prompt, max_new_tokens=gen, sampling=SamplingParams(seed=i),
+            arrival=arrival)
+    drive_sync(eng, clock, seng.step)
+    seng.drain()
+    seng._flush_streams()
+
+    delivered = {i: streams[i].drain() for i in range(len(trace))}
+    streams_finite = all(
+        len(delivered[i]) == trace[i][2]
+        and all(isinstance(t, int) for t in delivered[i])
+        and streams[i].finished is not None
+        for i in range(len(trace)))
+    results = eng.results()
+    s = eng.stats.summary()
+    token_match = (len(results) == len(trace)
+                   and all(toks == clean_toks[rid]
+                           for rid, toks in results.items())
+                   and not eng.failed()
+                   and s["shard_lost"] >= 1
+                   and s["degraded_ticks"] >= 1)
+    kv = eng.kv_cache
+    kv.check()
+    zero_leak = (not kv.slot_pages and not kv.slot_state
+                 and kv.table.free_pages == kv.paging.n_pages
+                 and sorted(kv._state_free)
+                 == list(range(kv.paging.n_state_pages))
+                 and sorted(eng._sched.free_slots) == list(range(N_SLOTS)))
+    return {
+        "streams_finite": bool(streams_finite),
+        "zero_leak": bool(zero_leak),
+        "recovery_token_match": bool(token_match),
+        "shard_lost": s["shard_lost"],
+        "degraded_ticks": s["degraded_ticks"],
+        "restarts": s["restarts"],
+        "replica_captures": (eng._replica.stats()["captures"]
+                             if eng._replica is not None else 0),
+        "injected_by_kind": dict(eng._injector.injected),
+    }
+
+
 def run_stream_match(trace, sync_toks, costs) -> dict:
     """Streamed ≡ synchronous tokens on the identical trace.  Drives a
     ``StreamingEngine`` (overlap ON, depth 2) on the same logical
@@ -602,6 +689,15 @@ def run_all() -> dict:
         res["chaos"][f"seed{seed}"] = run_chaos(
             overload_trace, toks["overload"]["preempt_on"], seed=seed)
 
+    # degraded-availability: a scheduled shard_loss kills the bench
+    # mesh's only sequence shard mid-decode — the window must serve
+    # finite tokens from the Segment-Means replicas and recovery must
+    # restore token identity with the clean run
+    deg_trace = make_trace(cfg, n_requests=10, arrival_gap=2.0,
+                           plen_range=(8, 33), gen_range=(8, 25),
+                           seed=6)
+    res["degraded"] = run_degraded(deg_trace)
+
     # streaming: token identity vs the sync packed run on the identical
     # main trace (logical clock), then the wall-clock load sweep —
     # offered load rises low -> high; TTFT/ITL tails and the idle-tick
@@ -733,6 +829,17 @@ def run_all() -> dict:
         "chaos_faults_fired": all(
             c["faults_injected"] > 0 and c["completed"] > 0
             for c in res["chaos"].values()),
+        # ---- degraded-mesh gates -------------------------------------
+        # every stream crossing the shard-loss window still closed with
+        # exactly its requested (finite) token count ...
+        "degraded_streams_finite": res["degraded"]["streams_finite"],
+        # ... the recovered engine audits clean ...
+        "degraded_zero_leak": res["degraded"]["zero_leak"],
+        # ... and after the re-prefill recovery every request finished
+        # token-identical to the clean run, with the degraded window
+        # actually observed (shard_lost/degraded_ticks >= 1)
+        "degraded_recovery_token_match": (
+            res["degraded"]["recovery_token_match"]),
         # ---- streaming gates -----------------------------------------
         # the overlapped double-buffered loop must deliver EXACTLY the
         # synchronous engine's tokens on the identical trace, and every
@@ -819,6 +926,14 @@ def main(report):
         report(f"engine/overload/{name}/preemptions", 0.0,
                f"{s['preemptions']} (spilled {s['spilled_pages']} pages, "
                f"{s['restore_hits']} restores)")
+    d = res["degraded"]
+    report("engine/degraded/shard_loss", 0.0,
+           f"shard_lost {d['shard_lost']} degraded_ticks "
+           f"{d['degraded_ticks']} restarts {d['restarts']} "
+           f"replica_captures {d['replica_captures']} "
+           f"streams_finite={d['streams_finite']} "
+           f"zero_leak={d['zero_leak']} "
+           f"recovery_token_match={d['recovery_token_match']}")
     m = res["stream"]["match"]
     report("engine/stream/token_match", 0.0,
            f"{m['token_match']} ({m['tokens_streamed']} streamed over "
@@ -844,7 +959,9 @@ def main(report):
                  "prefix_ttft_no_worse", "preempt_token_match",
                  "preempt_fired", "preempt_ttft_no_worse",
                  "chaos_token_match", "chaos_zero_leak",
-                 "chaos_faults_fired", "stream_token_match",
+                 "chaos_faults_fired", "degraded_streams_finite",
+                 "degraded_zero_leak", "degraded_recovery_token_match",
+                 "stream_token_match",
                  "stream_overlap_ran", "host_overhead_ok"):
         report(f"engine/gate/{gate}", 0.0, str(g[gate]))
     report("engine/stream/host_overhead_fraction", 0.0,
@@ -894,6 +1011,9 @@ if __name__ == "__main__":
             and g["preempt_token_match"] and g["preempt_fired"]
             and g["preempt_ttft_no_worse"]
             and g["chaos_token_match"] and g["chaos_zero_leak"]
-            and g["chaos_faults_fired"] and g["stream_token_match"]
+            and g["chaos_faults_fired"]
+            and g["degraded_streams_finite"] and g["degraded_zero_leak"]
+            and g["degraded_recovery_token_match"]
+            and g["stream_token_match"]
             and g["stream_overlap_ran"] and g["host_overhead_ok"]):
         sys.exit(1)

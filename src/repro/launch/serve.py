@@ -93,8 +93,20 @@ def main():
                     help="[engine] seeded fault injection: run the "
                          "trace under FaultPlan.chaos(SEED) — store "
                          "put/get loss, page poisoning, admission "
-                         "stalls, tick delays — and audit zero leaks "
-                         "after the drain")
+                         "stalls, tick delays, shard loss — and audit "
+                         "zero leaks after the drain")
+    ap.add_argument("--shard-loss", type=int, default=None,
+                    metavar="SHARD",
+                    help="[engine] degraded-mesh drill: kill sequence "
+                         "shard SHARD's KV mid-trace (scheduled "
+                         "shard_loss fault) — in-flight requests serve "
+                         "through the Segment-Means standby replicas, "
+                         "then recover by deterministic re-prefill; "
+                         "zero-leak audited like --chaos")
+    ap.add_argument("--shard-loss-at", type=int, default=6, metavar="N",
+                    help="[engine] shard_loss fires at the Nth "
+                         "opportunity (engine tick with work; "
+                         "default 6)")
     args = ap.parse_args()
 
     import jax
@@ -131,8 +143,14 @@ def main():
     if args.engine:
         from repro.serving import (EngineConfig, FaultPlan, SamplingParams,
                                    ServingEngine)
+        from repro.runtime.faults import FaultSpec
         faults = (FaultPlan.chaos(args.chaos)
                   if args.chaos is not None else None)
+        if args.shard_loss is not None:
+            spec = FaultSpec(at=(args.shard_loss_at,),
+                             shard=args.shard_loss)
+            faults = (FaultPlan(shard_loss=spec) if faults is None
+                      else FaultPlan.chaos(args.chaos, shard_loss=spec))
         ecfg = EngineConfig(
             n_slots=args.batch, prefill_len=n, max_cache=cap, hp=hp,
             prism=prism, gang=args.gang, chunk_len=args.chunk_len,
@@ -171,6 +189,9 @@ def main():
         extras += ", host offload" if args.offload else ""
         extras += (f", chaos seed {args.chaos}"
                    if args.chaos is not None else "")
+        extras += (f", shard {args.shard_loss} dies at tick "
+                   f"{args.shard_loss_at}"
+                   if args.shard_loss is not None else "")
         extras += (", streaming" + (" (overlap off)" if args.no_overlap
                                     else " (overlap)")
                    if args.stream else "")
@@ -236,6 +257,15 @@ def main():
             assert sorted(eng._sched.free_slots) == list(
                 range(args.batch))
             print("[chaos] zero-leak audits OK")
+            if args.shard_loss is not None:
+                s = eng.stats
+                rep = (eng._replica.stats()
+                       if eng._replica is not None else {})
+                print(f"[degraded] shard_lost {s.shard_lost} "
+                      f"degraded_ticks {s.degraded_ticks} "
+                      f"restarts {s.restarts} "
+                      f"replica_captures {rep.get('captures', 0)}")
+                assert s.shard_lost >= 1, "shard_loss never fired"
         return
 
     prompts = np.random.default_rng(0).integers(

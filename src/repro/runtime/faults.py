@@ -22,6 +22,16 @@ seeded :class:`FaultInjector` driven by a declarative
                        admissions (a stuck control plane).
   ``tick_delay``       ``ServingEngine.step`` — the whole tick does
                        nothing (a stalled device / dropped heartbeat).
+  ``shard_loss``       ``ServingEngine`` pre-tick — one sequence shard's
+                       KV becomes unreadable (a device dropping out of
+                       the mesh).  The engine enters DEGRADED mode: the
+                       lost shard's exact columns are masked out of the
+                       decode combine and substituted by its replicated
+                       Segment-Means columns (``runtime/replica.py``),
+                       then every affected request recovers via the
+                       deterministic re-prefill path.  ``FaultSpec.shard``
+                       pins the victim shard index; ``None`` draws it
+                       from the kind's seeded stream.
   ===================  ==================================================
 
 Every decision is a pure function of ``(seed, kind, op index)``: the
@@ -44,7 +54,7 @@ import numpy as np
 
 #: the closed set of injectable fault kinds (taxonomy in docs/serving.md)
 KINDS = ("store_put_loss", "store_get_loss", "page_poison",
-         "admission_stall", "tick_delay")
+         "admission_stall", "tick_delay", "shard_loss")
 
 
 @dataclass(frozen=True)
@@ -54,14 +64,24 @@ class FaultSpec:
     ``p`` fires Bernoulli(p) per opportunity from the injector's seeded
     stream; ``at`` fires at exactly those 0-based opportunity indices
     (both may be active — a fault fires if either says so).  The
-    default ``FaultSpec()`` never fires."""
+    default ``FaultSpec()`` never fires.
+
+    ``shard`` is meaningful for ``shard_loss`` only: it pins which
+    sequence shard dies when the fault fires (schedulable per shard
+    index — the CI soak kills each shard in turn).  ``None`` leaves the
+    victim to the injector's seeded ``pick``."""
     p: float = 0.0
     at: tuple = ()
+    shard: int | None = None
 
     def __post_init__(self):
         if not 0.0 <= self.p <= 1.0:
             raise ValueError(f"fault probability {self.p} not in [0, 1]")
         object.__setattr__(self, "at", tuple(int(i) for i in self.at))
+        if self.shard is not None:
+            if int(self.shard) < 0:
+                raise ValueError(f"shard index {self.shard} < 0")
+            object.__setattr__(self, "shard", int(self.shard))
 
     @property
     def enabled(self) -> bool:
@@ -78,6 +98,7 @@ class FaultPlan:
     page_poison: FaultSpec = field(default_factory=FaultSpec)
     admission_stall: FaultSpec = field(default_factory=FaultSpec)
     tick_delay: FaultSpec = field(default_factory=FaultSpec)
+    shard_loss: FaultSpec = field(default_factory=FaultSpec)
 
     def spec(self, kind: str) -> FaultSpec:
         if kind not in KINDS:
@@ -101,6 +122,10 @@ class FaultPlan:
             page_poison=FaultSpec(p=0.02),
             admission_stall=FaultSpec(p=0.10),
             tick_delay=FaultSpec(p=0.05),
+            # rare but catastrophic: each hit costs a degraded-serving
+            # window plus a re-prefill of every active request, so the
+            # soak keeps it an order of magnitude below the others
+            shard_loss=FaultSpec(p=0.02),
         )
         base.update(overrides)
         return cls(seed=seed, **base)

@@ -19,6 +19,7 @@ can corrupt a neighbour slot.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any
@@ -67,6 +68,7 @@ class KVStore:
         self.evictions = 0      # LRU entries pushed out by later puts
         self.hits = 0           # pops that found their entry
         self.misses = 0         # pops/peeks that did not
+        self.get_retries = 0    # transient read losses retried away
         # seeded chaos hook (runtime/faults.py): a fired
         # ``store_put_loss`` drops the put, a fired ``store_get_loss``
         # loses an existing entry at read time — both surface to the
@@ -128,6 +130,39 @@ class KVStore:
         self.hits += 1
         return ent
 
+    def get(self, key, *, retries: int = 0, backoff_s: float = 0.0,
+            consume: bool = False) -> SpilledEntry | None:
+        """Bounded retry-with-backoff read — the restore path's front
+        door.  An injected ``store_get_loss`` models a TRANSIENT torn
+        read, not necessarily permanent loss, so a loss on a non-final
+        attempt RETAINS the entry and tries again (each attempt draws
+        its own injector opportunity; ``backoff_s`` > 0 sleeps
+        ``backoff_s * 2**attempt`` between attempts — the engine passes
+        0 under logical clocks).  A loss on the final attempt keeps the
+        old torn-read semantics: the entry is dropped and the caller
+        downgrades to re-prefill.  ``retries=0`` is exactly ``peek``
+        (or ``pop`` with ``consume=True``)."""
+        for attempt in range(retries + 1):
+            ent = self._entries.get(key)
+            if ent is None:
+                self.misses += 1
+                return None
+            if not self._lost("store_get_loss"):
+                if consume:
+                    self._entries.pop(key)
+                    self.bytes_used -= ent.nbytes
+                    self.hits += 1
+                else:
+                    self._entries.move_to_end(key)
+                return ent
+            if attempt < retries:
+                self.get_retries += 1
+                if backoff_s > 0.0:
+                    time.sleep(backoff_s * (2 ** attempt))
+        self.drop(key)                  # torn on the last attempt: gone
+        self.misses += 1
+        return None
+
     def drop(self, key) -> None:
         """Silently discard an entry (cancelled request, fault inject)."""
         ent = self._entries.pop(key, None)
@@ -166,4 +201,5 @@ class KVStore:
                 "capacity_bytes": self.capacity_bytes,
                 "puts": self.puts, "drops": self.drops,
                 "evictions": self.evictions,
-                "hits": self.hits, "misses": self.misses}
+                "hits": self.hits, "misses": self.misses,
+                "get_retries": self.get_retries}

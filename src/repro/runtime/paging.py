@@ -544,30 +544,36 @@ class KVCache:
         self._state_free.append(srow)
         return len(pages)
 
-    def plan_restore(self, key, store) -> AdmitPlan | None:
+    def plan_restore(self, key, store, *, retries: int = 0,
+                     backoff_s: float = 0.0) -> AdmitPlan | None:
         """Admission plan for restoring a spilled request — the same
         shape ``plan`` returns, but the covered-token count comes from
         the store instead of the prefix cache and every page is fresh
-        (content arrives by injection, not sharing).  Returns None when
-        the store lost the entry (host-memory pressure): the caller
-        must fall back to a plain re-prefill plan."""
-        ent = store.peek(key)
+        (content arrives by injection, not sharing).  ``retries``
+        re-reads through transient store losses (``KVStore.get``)
+        before giving up.  Returns None when the store lost the entry
+        for good (host-memory pressure): the caller must fall back to a
+        plain re-prefill plan."""
+        ent = store.get(key, retries=retries, backoff_s=backoff_s)
         if ent is None:
             return None
         return AdmitPlan(total_pages=ent.n_pages, fresh_pages=ent.n_pages,
                          covered=ent.tokens)
 
-    def restore(self, key, slot: int, store) -> bool:
+    def restore(self, key, slot: int, store, *, retries: int = 0,
+                backoff_s: float = 0.0) -> bool:
         """Inject the spilled content for ``key`` into the fresh pages
         just bound to ``slot`` (``plan_restore`` → ``reserve`` →
         ``bind`` must have run).  Pages are physically different from
         the ones spilled; the page/state maps make relocation invisible
         to the step programs, so decode resumes bit-equal in both
-        cache modes.  Returns False when the store dropped the entry
-        between planning and binding — the pages stay bound (the
-        restore plan is never smaller than a re-prefill plan for the
-        same request), so the caller just re-prefills into them."""
-        ent = store.pop(key)
+        cache modes.  ``retries`` re-reads through transient store
+        losses before giving up.  Returns False when the store dropped
+        the entry between planning and binding — the pages stay bound
+        (the restore plan is never smaller than a re-prefill plan for
+        the same request), so the caller just re-prefills into them."""
+        ent = store.get(key, retries=retries, backoff_s=backoff_s,
+                        consume=True)
         if ent is None:
             return False
         pages = self.slot_pages[slot]

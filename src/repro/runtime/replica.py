@@ -1,0 +1,318 @@
+"""Segment-Means standby replicas — the redundancy layer behind
+degraded-mesh serving (``shard_loss`` in ``runtime/faults.py``).
+
+PRISM's own compression is the natural replication mechanism: each
+sequence shard's Segment-Means summary (kz/vz + repeat counts gz) is
+CR× smaller than its raw KV, so keeping a standby copy of EVERY live
+request's per-shard means is nearly free.  When a shard drops out of
+the mesh mid-decode, the degraded step program
+(``make_serve_step(degraded=True)``) masks the lost shard's exact
+columns out of the flash-decode stat combine and substitutes its
+replicated means columns through the existing ``+log g`` bias path —
+in-flight requests keep emitting finite tokens with PRISM-bounded
+quality loss instead of failing outright.
+
+One :class:`MeansReplica` per engine, armed only when a ``shard_loss``
+fault is schedulable (paged cache required — captures ride the
+``KVCache.extract_slot`` gather).  It piggybacks the engine tick:
+
+  * **capture** — on a slot's first decode tick (and on a bounded
+    staleness-driven refresh schedule) the slot's cache footprint is
+    gathered host-side once.  In ``prism`` decode mode the means state
+    row (kz/vz/gz/zsum) is copied verbatim — though the paged prism
+    state pool is already replicated across the sequence shards, so
+    the cache itself survives a shard loss and this host copy is the
+    belt-and-braces standby.  In ``exact`` decode mode no means exist
+    yet, so the replica CUTS them: per lost-able shard, the captured
+    roped K / V rows split into ``L`` contiguous segments and their
+    column means become the standby kz/vz with gz = real-token counts
+    (the same shard-major ``n_seq·L`` column grid the prism cache
+    uses).
+  * **staleness** — each capture records the covered position count;
+    positions decoded after the capture are NOT in any replica column
+    and are simply lost with the shard (``staleness(slot) = written -
+    covered``).  The engine bounds this with its refresh schedule.
+  * **assemble** — one device tree per degraded tick: the per-layer
+    (B, n_seq·L) means batch the degraded exact program consumes,
+    zero-rowed (gz = 0 → dead columns) for slots with no capture.
+
+Replicas never capture DURING a degraded window — the lost shard's
+device memory is exactly what the fault declared unreadable, and a
+gather would read through it.  Recovery (engine-orchestrated
+``reset_for_refill`` re-prefill) drops every replica; captures resume
+with the rebuilt exact KV.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.segment_means import segment_sizes
+
+
+def _seg_counts(k: int, L: int) -> np.ndarray:
+    """Per-segment real-token counts for ``k`` filled columns over an
+    ``L``-segment grid: the paper's split when ``k >= L``; one token
+    per leading segment (trailing segments dead, gz = 0) when the slot
+    holds fewer columns than segments."""
+    if k <= 0:
+        return np.zeros(L, np.int64)
+    if k < L:
+        sizes = np.zeros(L, np.int64)
+        sizes[:k] = 1
+        return sizes
+    return segment_sizes(k, L)
+
+
+def _filled_local_cols(lay, shard: int, covered: int) -> int:
+    """How many LOCAL cache columns of ``shard`` hold real positions
+    once [0, covered) are written, under the layout's placement."""
+    if covered <= 0:
+        return 0
+    if lay.placement == "rr":
+        # position p -> shard p % n_seq, local col p // n_seq
+        return (covered - shard + lay.n_seq - 1) // lay.n_seq \
+            if covered > shard else 0
+    # aligned: prefill block [s·n_loc0, (s+1)·n_loc0) then round-robin
+    n0, n_loc0 = lay.prefill_len, lay.n_loc0
+    pre = int(np.clip(covered - shard * n_loc0, 0, n_loc0))
+    extra = covered - n0
+    dec = (extra - shard + lay.n_seq - 1) // lay.n_seq \
+        if extra > shard else 0
+    return pre + max(0, dec)
+
+
+def _local_positions(lay, shard: int, n_cols: int) -> np.ndarray:
+    """Global position of each local column [0, n_cols) on ``shard``
+    (the inverse of ``runtime.serve._decode_cols``'s col_pos map)."""
+    j = np.arange(n_cols)
+    if lay.placement == "rr":
+        return j * lay.n_seq + shard
+    n0, n_loc0 = lay.prefill_len, lay.n_loc0
+    return np.where(j < n_loc0, shard * n_loc0 + j,
+                    n0 + (j - n_loc0) * lay.n_seq + shard)
+
+
+@dataclass
+class _SlotReplica:
+    """One slot's standby state: per-layer means trees + freshness."""
+    rid: int
+    epoch: int
+    covered: int                       # positions the capture covers
+    tick: int                          # engine tick of the capture
+    pages: tuple                       # page-table metadata at capture
+    state_row: int | None              # prism state row at capture
+    layers: dict = field(default_factory=dict)   # {"scan": [...], ...}
+    nbytes: int = 0
+
+
+class MeansReplica:
+    """Host-side standby replica of every live slot's per-shard
+    Segment-Means state (see module docstring).  Pure numpy + one
+    ``extract_slot`` gather per capture; ``assemble()`` is the only
+    device transfer and is cached until the replica set changes."""
+
+    def __init__(self, cfg, lay, hp, paging, n_slots: int,
+                 refresh_every: int = 16):
+        self.cfg, self.lay, self.hp = cfg, lay, hp
+        self.paging = paging
+        self.n_slots = int(n_slots)
+        self.refresh_every = max(1, int(refresh_every))
+        self.m = lay.n_seq * lay.L
+        #: shard each replica column belongs to (shard-major, the same
+        #: grid ``runtime.serve._means_meta`` uses)
+        self.shard_of = np.repeat(np.arange(lay.n_seq), lay.L)
+        self._slots: dict[int, _SlotReplica] = {}
+        self._assembled = None         # device-tree cache
+        self.captures = 0
+        self.refreshes = 0
+
+    # -- capture --------------------------------------------------------
+    def has(self, slot: int, st) -> bool:
+        rep = self._slots.get(slot)
+        return (rep is not None and rep.rid == st.req.rid
+                and rep.epoch == st.epoch)
+
+    def staleness(self, slot: int, st) -> int:
+        """Positions written since the capture (lost with the shard)."""
+        rep = self._slots.get(slot)
+        if rep is None or rep.rid != st.req.rid or rep.epoch != st.epoch:
+            return 1 << 30
+        return max(0, (st.pos + 1) - rep.covered)
+
+    def tick(self, kv, states, tick_no: int) -> int:
+        """The per-tick piggyback: capture every decoding slot that has
+        no current replica, plus AT MOST ONE staleness refresh (the
+        stalest slot past ``refresh_every``) so the host gather cost
+        stays O(1) per tick at steady state.  Returns captures made."""
+        made = 0
+        stalest, worst = None, 0
+        for st in states:
+            if not self.has(st.slot, st):
+                self.capture(kv, st, tick_no)
+                made += 1
+            else:
+                s = self.staleness(st.slot, st)
+                if s >= self.refresh_every and s > worst:
+                    stalest, worst = st, s
+        if stalest is not None:
+            self.capture(kv, stalest, tick_no)
+            self.refreshes += 1
+            made += 1
+        return made
+
+    def capture(self, kv, st, tick_no: int = 0) -> None:
+        """Gather ``st``'s cache footprint and cut/copy its standby
+        means.  ``covered = st.pos + 1`` — every position a decoding
+        slot has fed is written (the rewind rewrite included)."""
+        slot = st.slot
+        covered = int(st.pos) + 1
+        payload = kv.extract_slot(slot)
+        if payload is None:            # host-only bookkeeping mode
+            return
+        if self.hp.decode_mode == "prism":
+            layers = self._copy_state(payload)
+        else:
+            layers = self._cut_means(payload, covered)
+        nbytes = int(sum(a.nbytes for t in layers["scan"] + layers["tail"]
+                         for a in t.values()))
+        self._slots[slot] = _SlotReplica(
+            rid=st.req.rid, epoch=st.epoch, covered=covered,
+            tick=int(tick_no),
+            pages=tuple(kv.slot_pages.get(slot, ())),
+            state_row=kv.slot_state.get(slot),
+            layers=layers, nbytes=nbytes)
+        self.captures += 1
+        self._assembled = None
+
+    def _copy_state(self, payload) -> dict:
+        """Prism: the cache already carries the means — copy the state
+        row (squeezing the width-1 row axis the extract keeps)."""
+        def one(tree, axis):
+            out = {}
+            for k in ("kz", "vz", "gz"):
+                if k in tree:
+                    # scan: (n_units, 1, m, ...) -> (n_units, m, ...);
+                    # tail: (1, m, ...) -> (m, ...)
+                    out[k] = np.asarray(tree[k]).squeeze(axis)
+            return out
+        return {"scan": [one(t, 1) for t in payload["scan"]],
+                "tail": [one(t, 0) for t in payload["tail"]]}
+
+    def _cut_means(self, payload, covered: int) -> dict:
+        """Exact mode: cut shard-major Segment-Means from the captured
+        roped K / V pages.  Payload k/v leaves are the slot's pages
+        gathered over the GLOBAL pool column dim — scan
+        (n_units, P, pool_cap, Hkv, hd), tail (P, pool_cap, Hkv, hd) —
+        where pool column ``s·pc + t`` of page ``q`` is shard ``s``'s
+        local column ``q·pc + t``."""
+        lay, L = self.lay, self.lay.L
+        pc = self.paging.page_cols
+
+        def one(tree, page_axis):
+            if "k" not in tree:
+                return {}
+            k = np.asarray(tree["k"])
+            v = np.asarray(tree["v"])
+            n_pages = k.shape[page_axis]
+            lead = k.shape[:page_axis]            # () or (n_units,)
+            hkv, hd = k.shape[-2], k.shape[-1]
+            kz = np.zeros(lead + (self.m, hkv, hd), k.dtype)
+            vz = np.zeros(lead + (self.m, hkv, hd), v.dtype)
+            gz = np.zeros(lead + (self.m,), np.float32)
+            for s in range(lay.n_seq):
+                filled = _filled_local_cols(lay, s, covered)
+                filled = min(filled, n_pages * pc)
+                if filled <= 0:
+                    continue
+                # local cols [0, filled) of shard s, page-major order
+                j = np.arange(filled)
+                sel = (j // pc, s * pc + j % pc)  # (page, pool col)
+                if page_axis == 0:
+                    ks = k[sel[0], sel[1]]        # (filled, Hkv, hd)
+                    vs = v[sel[0], sel[1]]
+                else:
+                    ks = k[:, sel[0], sel[1]]     # (n_units, filled, ..)
+                    vs = v[:, sel[0], sel[1]]
+                sizes = _seg_counts(filled, L)
+                start = 0
+                for c, n in enumerate(sizes):
+                    if n <= 0:
+                        continue
+                    col = s * L + c
+                    sl = slice(start, start + int(n))
+                    kz[..., col, :, :] = ks[..., sl, :, :].mean(axis=-3)
+                    vz[..., col, :, :] = vs[..., sl, :, :].mean(axis=-3)
+                    gz[..., col] = float(n)
+                    start += int(n)
+            return {"kz": kz, "vz": vz, "gz": gz}
+        return {"scan": [one(t, 1) for t in payload["scan"]],
+                "tail": [one(t, 0) for t in payload["tail"]]}
+
+    # -- drop -----------------------------------------------------------
+    def drop(self, slot: int) -> None:
+        if self._slots.pop(slot, None) is not None:
+            self._assembled = None
+
+    def drop_all(self) -> None:
+        if self._slots:
+            self._assembled = None
+        self._slots.clear()
+
+    # -- assemble (degraded exact program input) -------------------------
+    def lost_mask(self, lost) -> np.ndarray:
+        """(n_seq,) float32 mask the degraded program takes: 1.0 marks
+        an unreadable shard."""
+        m = np.zeros(self.lay.n_seq, np.float32)
+        for s in lost:
+            m[int(s) % self.lay.n_seq] = 1.0
+        return m
+
+    def assemble(self):
+        """The degraded EXACT program's replica input: per layer a
+        batched {"kz" (B, m, Hkv, hd), "vz", "gz" (B, m)} tree (scan
+        units stacked with leading n_units), zero rows — gz = 0, dead
+        columns — for slots with no standby.  Built once per replica-set
+        change, then served from the device cache."""
+        if self._assembled is not None:
+            return self._assembled
+        import jax.numpy as jnp
+
+        cfg, B, m = self.cfg, self.n_slots, self.m
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+        u, n_units, _ = cfg.scan_split
+        kinds = cfg.block_kinds
+
+        def zeros(kind, lead):
+            if kind not in ("attn", "moe", "shared_attn"):
+                return {}
+            sh = (lead + (B,) if lead else (B,))
+            return {"kz": np.zeros(sh + (m, hkv, hd), np.float32),
+                    "vz": np.zeros(sh + (m, hkv, hd), np.float32),
+                    "gz": np.zeros(sh + (m,), np.float32)}
+        host = {"scan": [zeros(kinds[j], (n_units,)) for j in range(u)],
+                "tail": [zeros(kinds[n_units * u + t], ())
+                         for t in range(len(kinds) - n_units * u)]}
+        for slot, rep in self._slots.items():
+            for dst, src in zip(host["scan"], rep.layers["scan"]):
+                for key in dst:
+                    dst[key][:, slot] = src[key]
+            for dst, src in zip(host["tail"], rep.layers["tail"]):
+                for key in dst:
+                    dst[key][slot] = src[key]
+        self._assembled = {
+            "scan": [{k: jnp.asarray(v) for k, v in t.items()}
+                     for t in host["scan"]],
+            "tail": [{k: jnp.asarray(v) for k, v in t.items()}
+                     for t in host["tail"]]}
+        return self._assembled
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> dict:
+        return {"slots": len(self._slots),
+                "captures": self.captures,
+                "refreshes": self.refreshes,
+                "bytes": int(sum(r.nbytes for r in self._slots.values())),
+                "covered": {s: r.covered
+                            for s, r in sorted(self._slots.items())}}

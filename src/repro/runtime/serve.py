@@ -708,7 +708,7 @@ def _decode_cols(lay: ServeLayout, idx, pos):
 
 def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
                 lay: ServeLayout, hp: ServeHParams, *, local: bool,
-                page_map=None, state_map=None):
+                page_map=None, state_map=None, degraded=None):
     """x (B,1,D) replicated over seq axes, pos (B,) per-request positions
     (-1 = idle slot) -> (out (B,1,D), new layer cache).
 
@@ -719,7 +719,21 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
     ``state_map`` (B,) from the state-page pool.  Everything is
     replicated over the batch axes (identical writes on every
     replica), so the attention combine still runs over the sequence
-    axes only."""
+    axes only.
+
+    ``degraded = (lost, rep)`` arms the shard-loss path (engine
+    degraded mode, ``runtime/replica.py``): ``lost`` is the (n_seq,)
+    float mask of unreadable sequence shards.  On a lost shard every
+    exact column is masked out of the stat combine and cache writes
+    are dropped; the shard's positions are served instead by
+    Segment-Means columns through the existing ``+log g`` bias path —
+    in exact mode from the standby replica ``rep`` ({"kz" (B,m,Hkv,hd),
+    "vz", "gz" (B,m)}, served ONLY by the lost shard so the psum
+    counts each mean once — in the simulation its device lanes stand
+    in for the neighbor that would host the replica), in prism mode
+    from the means already replicated in the cache (the lost shard's
+    own-shard gate simply opens, ``rep`` rides as None).  Tokens stay
+    finite with PRISM-bounded quality loss instead of failing."""
     xn = norm(p["ln1"], x, cfg.norm_kind)
     rp = pos[:, None]                          # (B,1) row positions
     q = attn_project_q(p["attn"], spec, xn, rp)
@@ -743,23 +757,31 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
     else:
         idx = _seq_index(lay.seq_axes)
         slot, owner, col_pos = _decode_cols(lay, idx, pos)
+        wr_ok, lostf, rep = owner, None, None
+        if degraded is not None:
+            lost_vec, rep = degraded
+            lostf = jnp.take(lost_vec, idx) > 0    # this shard is dead
+            wr_ok = owner & ~lostf                 # writes dropped there
         if page_map is not None:
             pc = c["k"].shape[1]
             colc = jnp.clip(slot, 0, lay.cap_l - 1)
             pg = jnp.take_along_axis(
                 page_map, (colc // pc)[:, None], axis=1)[:, 0]
             k_pool = _write_pool(c["k"], k_new[:, 0], pg, colc % pc,
-                                 owner)
+                                 wr_ok)
             v_pool = _write_pool(c["v"], v_new[:, 0], pg, colc % pc,
-                                 owner)
+                                 wr_ok)
             k_c = _gather_pages(k_pool, page_map)
             v_c = _gather_pages(v_pool, page_map)
             mapped = jnp.repeat(page_map >= 0, pc, axis=1)
             valid = mapped & (col_pos[None, :] <= pos[:, None])
         else:
-            k_c = _write_slot(c["k"], k_new, slot, owner)
-            v_c = _write_slot(c["v"], v_new, slot, owner)
+            k_c = _write_slot(c["k"], k_new, slot, wr_ok)
+            v_c = _write_slot(c["v"], v_new, slot, wr_ok)
             valid = col_pos[None, :] <= pos[:, None]
+        if lostf is not None:
+            # the lost shard's exact columns leave the stat combine
+            valid = valid & ~lostf
         if hp.decode_mode == "prism" and "kz" in c:
             # per-request repeat counts ride in the cache (written by
             # the prefill that captured kz/vz, so they count REAL
@@ -779,14 +801,35 @@ def attn_decode(p, spec: AttnSpec, cfg: ModelConfig, x, c, pos,
                 vz_r = jnp.take(c["vz"], sr, axis=0)
             else:
                 cnt, kz_r, vz_r = c["gz"], c["kz"], c["vz"]
+            served = jnp.asarray(shard_of)[None, :] != idx
+            if lostf is not None:
+                # the state pool is replicated across the seq shards,
+                # so the means ARE the standby: the lost shard's own
+                # columns open up everywhere (including on itself)
+                lost_col = jnp.take(lost_vec, jnp.asarray(shard_of)) > 0
+                served = served | lost_col[None, :]
             gz = jnp.where(
-                (jnp.asarray(shard_of)[None, :] != idx)
+                served
                 & (jnp.asarray(lo)[None, :] + cnt <= pos[:, None] + 1),
                 cnt, 0.0)
             out = decode_attention(
                 q, k_c, v_c, valid, lay.seq_axes, scale,
                 gz=gz, kz=kz_r, vz=vz_r, owner=owner,
                 mode="prism", backend=hp.backend)
+        elif rep is not None:
+            # exact degraded: substitute the lost shard's columns with
+            # its standby Segment-Means replica, served only on the
+            # lost shard itself so the exact psum counts each mean once
+            shard_of_r = np.repeat(np.arange(lay.n_seq), lay.L)
+            lost_col = jnp.take(lost_vec, jnp.asarray(shard_of_r)) > 0
+            serve = lost_col[None, :] & \
+                (jnp.asarray(shard_of_r)[None, :] == idx)
+            gz_d = jnp.where(serve, rep["gz"], 0.0)
+            out = decode_attention(
+                q, k_c, v_c, valid, lay.seq_axes, scale,
+                gz=gz_d, kz=rep["kz"].astype(k_c.dtype),
+                vz=rep["vz"].astype(v_c.dtype),
+                mode="exact", backend=hp.backend)
         else:
             out = decode_attention(q, k_c, v_c, valid, lay.seq_axes,
                                    scale, backend=hp.backend)
@@ -901,8 +944,12 @@ class DecodeMoeCtx:
 
 def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
                  lay: ServeLayout, hp: ServeHParams,
-                 tp_flags=(False, False), page_map=None, state_map=None):
-    """One residual block, single-token decode.  Returns (x, new_cache)."""
+                 tp_flags=(False, False), page_map=None, state_map=None,
+                 degraded=None):
+    """One residual block, single-token decode.  Returns (x, new_cache).
+    ``degraded`` (see ``attn_decode``) arms the shard-loss substitution
+    on the sequence-sharded attention kinds; ring-window and SSM state
+    is replicated over the sequence axes and unaffected."""
     attn_tp, ffn_tp = tp_flags
     use_tp = hp.decode_tp and kind in ("attn", "moe", "shared_attn")
 
@@ -919,7 +966,9 @@ def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
         else:
             o, c = attn_decode(p, spec, cfg, x, c, pos, lay, hp,
                                local=(kind == "attn_local"),
-                               page_map=page_map, state_map=state_map)
+                               page_map=page_map, state_map=state_map,
+                               degraded=(None if kind == "attn_local"
+                                         else degraded))
         x = x + o
         if cfg.parallel_block:
             return x, c
@@ -938,7 +987,7 @@ def block_decode(cfg: ModelConfig, kind: str, p, shared, x, c, pos,
         else:
             o, c = attn_decode(shared, spec, cfg, x, c, pos, lay, hp,
                                local=False, page_map=page_map,
-                               state_map=state_map)
+                               state_map=state_map, degraded=degraded)
         x = x + o
         x = x + ffn(shared["mlp"], norm(shared["ln2"], x, cfg.norm_kind))
         return x, c
@@ -1012,7 +1061,8 @@ def embed_token(cfg: ModelConfig, params, rules, token, pos, *,
 def make_serve_step(cfg: ModelConfig, mesh, params, *,
                     batch: int, cap: int, prefill_len: int | None = None,
                     hp: ServeHParams = ServeHParams(),
-                    paging: PagedLayout | None = None):
+                    paging: PagedLayout | None = None,
+                    degraded: bool = False):
     """jitted (params, cache, token (B,), pos (B,)) -> (logits, cache).
 
     ``pos`` carries one position per batch row, so independent requests
@@ -1028,9 +1078,23 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
     pos vectors ride replicated (the pool is replicated over the batch
     axes; every replica computes identical writes), and logits come
     back replicated too.
+
+    ``degraded=True`` builds the SHARD-LOSS variant the engine runs
+    while a sequence shard is unreadable: the program takes one extra
+    ``lost (n_seq,)`` float mask (replicated) and — in exact decode
+    mode — a standby-replica tree ({"scan": [{kz,vz,gz} ...], "tail":
+    [...]}, ``MeansReplica.assemble``'s output, replicated).  The lost
+    shard's exact columns are masked out of the stat combine and its
+    positions served from Segment-Means columns instead (see
+    ``attn_decode``); cache writes to the lost shard are dropped.
+    Requires the paged cache (the engine's degraded orchestration
+    rides page-table bookkeeping).
     """
     lay = make_layout(cfg, mesh, batch, cap, hp, prefill_len,
                       _paged_placement(hp, paging))
+    if degraded:
+        assert paging is not None, \
+            "degraded decode requires the paged cache"
     if paging is not None:
         assert not hp.decode_tp, "paged serving does not support decode_tp"
     if hp.decode_tp:
@@ -1051,29 +1115,51 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
 
     u, n_units, _ = cfg.scan_split
     unit_kinds = cfg.block_kinds[:u]
+    # degraded exact mode takes the standby-replica tree as one more
+    # input; degraded prism reads its means straight from the
+    # (replicated) cache state pool and needs only the lost mask
+    with_rep = degraded and hp.decode_mode == "exact"
+
+    def _rep_spec(kind):
+        if kind not in ("attn", "moe", "shared_attn"):
+            return {}
+        return {k: P(None) for k in ("kz", "vz", "gz")}
+    rep_specs = ({"scan": [_rep_spec(unit_kinds[j]) for j in range(u)],
+                  "tail": [_rep_spec(cfg.block_kinds[n_units * u + t])
+                           for t in range(len(cfg.block_kinds)
+                                          - n_units * u)]}
+                 if with_rep else None)
 
     def body_core(params_local, cache_local, token, pos, page_map,
-                  state_map):
-        trace_counts["serve_step"] += 1
+                  state_map, lost=None, rep=None):
+        trace_counts["serve_step_degraded" if degraded
+                     else "serve_step"] += 1
         x = embed_token(cfg, params_local, rules, token, pos,
                         sharded_vocab=vocab_sharded)
 
         def unit_body(x, xs):
-            p_sl, c_sl = xs
+            if rep is not None:
+                p_sl, c_sl, r_sl = xs
+            else:
+                (p_sl, c_sl), r_sl = xs, None
             shared = (gather_tree(params_local["shared"], shared_rules)
                       if shared_rules else None)
             new = []
             for j, kind in enumerate(unit_kinds):
                 p = gather_tree(p_sl[j], rules["scan"][j])
+                deg = (None if lost is None else
+                       (lost, r_sl[j] if (r_sl is not None and r_sl[j])
+                        else None))
                 x, nc = block_decode(cfg, kind, p, shared, x, c_sl[j],
                                      pos, lay, hp, tp_flags,
-                                     page_map, state_map)
+                                     page_map, state_map, degraded=deg)
                 new.append(nc)
             return x, tuple(new)
 
-        x, new_stacks = lax.scan(
-            unit_body, x,
-            (tuple(params_local["scan"]), tuple(cache_local["scan"])))
+        xs = (tuple(params_local["scan"]), tuple(cache_local["scan"]))
+        if rep is not None:
+            xs = xs + (tuple(rep["scan"]),)
+        x, new_stacks = lax.scan(unit_body, x, xs)
 
         new_tail = []
         for t, tree in enumerate(params_local["tail"]):
@@ -1081,9 +1167,14 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
             p = gather_tree(tree, rules["tail"][t])
             shared = (gather_tree(params_local["shared"], shared_rules)
                       if shared_rules else None)
+            deg = None
+            if lost is not None:
+                rt = rep["tail"][t] if rep is not None else {}
+                deg = (lost, rt if rt else None)
             x, nc = block_decode(cfg, kind, p, shared, x,
                                  cache_local["tail"][t], pos, lay, hp,
-                                 tp_flags, page_map, state_map)
+                                 tp_flags, page_map, state_map,
+                                 degraded=deg)
             new_tail.append(nc)
 
         x = norm(params_local["final_norm"], x, cfg.norm_kind)
@@ -1096,14 +1187,18 @@ def make_serve_step(cfg: ModelConfig, mesh, params, *,
     vspec = P(None) if paging is not None else P(lay.bspec)
     lspec = P(None if paging is not None else lay.bspec,
               "model" if vocab_sharded else None)
+    extra = ()
+    if degraded:
+        extra = ((P(None), rep_specs) if with_rep else (P(None),))
     if paging is not None:
         body = body_core
-        in_specs = (pspecs, cspecs, vspec, vspec, P(None), P(None))
+        in_specs = (pspecs, cspecs, vspec, vspec, P(None), P(None)) \
+            + extra
     else:
-        def body(params_local, cache_local, token, pos):
+        def body(params_local, cache_local, token, pos, *deg):
             return body_core(params_local, cache_local, token, pos,
-                             None, None)
-        in_specs = (pspecs, cspecs, vspec, vspec)
+                             None, None, *deg)
+        in_specs = (pspecs, cspecs, vspec, vspec) + extra
     body_sm = shard_map(
         body, mesh=mesh,
         in_specs=in_specs,

@@ -70,6 +70,7 @@ from ..models.config import ModelConfig
 from ..runtime.faults import FaultInjector, FaultPlan
 from ..runtime.offload import KVStore
 from ..runtime.paging import AdmitPlan, make_paged_layout
+from ..runtime.replica import MeansReplica
 from ..runtime.serve import (ServeHParams, _paged_placement, make_layout,
                              make_chunk_prefill_step, make_kv_cache,
                              make_packed_step, make_prefill_step,
@@ -113,10 +114,25 @@ class EngineConfig:
     offload_bytes: int | None = None   # store capacity (None = unbounded)
     faults: FaultPlan | None = None    # seeded chaos plan (None = off)
     max_restarts: int = 3              # reset_for_refill bound per request
+    degraded_grace: int = 2            # means-substituted ticks per loss
+    replica_refresh: int = 16          # standby staleness refresh period
+    restore_retries: int = 2           # KVStore.get retries before refill
+    restore_backoff_s: float = 0.0     # exponential backoff base (sleep)
 
     def __post_init__(self):
         if self.max_restarts < 1:
             raise ValueError(f"max_restarts {self.max_restarts} < 1")
+        if self.degraded_grace < 0:
+            raise ValueError(f"degraded_grace {self.degraded_grace} < 0")
+        if self.replica_refresh < 1:
+            raise ValueError(
+                f"replica_refresh {self.replica_refresh} < 1")
+        if self.restore_retries < 0:
+            raise ValueError(
+                f"restore_retries {self.restore_retries} < 0")
+        if self.restore_backoff_s < 0.0:
+            raise ValueError(
+                f"restore_backoff_s {self.restore_backoff_s} < 0")
         if self.faults is not None and not isinstance(self.faults,
                                                       FaultPlan):
             raise ValueError(
@@ -311,6 +327,19 @@ class ServingEngine:
         # flush admission cannot re-prefill an active slot in place,
         # so quarantine is only armed for the packed/chunked engines
         self._nan_guard = self.prefill_mode != "padded"
+        # degraded-mesh serving (shard_loss): the standby replica is
+        # armed only when the fault is schedulable AND the cache is
+        # paged (captures ride the extract_slot gather; recovery rides
+        # the page-table scrub + re-prefill path).  Non-paged engines
+        # never draw the shard_loss stream.
+        self._replica = None
+        self._lost: set = set()        # sequence shards currently dead
+        self._degraded_left = 0        # grace ticks before recovery
+        if (self._injector is not None and self._paged
+                and config.faults.spec("shard_loss").enabled):
+            self._replica = MeansReplica(
+                cfg, self.layout, hp, self._paging, n_slots,
+                refresh_every=config.replica_refresh)
 
     @staticmethod
     def _derive_paging(base, config: EngineConfig):
@@ -360,6 +389,12 @@ class ServingEngine:
                   paging=self._paging)
         if kind == "decode":
             prog, lay, _, _ = make_serve_step(cfg, mesh, params, **kw)
+            assert lay == self.layout, (lay, self.layout)
+        elif kind == "decode_degraded":
+            # the shard-loss variant: built lazily on the first
+            # degraded tick, then cached like every other program
+            prog, lay, _, _ = make_serve_step(cfg, mesh, params,
+                                              degraded=True, **kw)
             assert lay == self.layout, (lay, self.layout)
         elif kind == "packed":
             prog, lay, _, _ = make_packed_step(
@@ -464,6 +499,17 @@ class ServingEngine:
             self.stats.ticks_idle += 1
         if self._injector is not None:
             self.stats.faults_injected = self._injector.total_injected
+            self.stats.faults_by_kind = dict(self._injector.injected)
+        if self._store is not None:
+            self.stats.store_get_retries = self._store.get_retries
+        # standby-replica piggyback: after a healthy tick, capture any
+        # newly decoding slot (plus one bounded staleness refresh).
+        # NEVER while degraded — a capture would read the lost shard.
+        if (self._replica is not None and not self._lost
+                and kind in ("decode", "packed", "prefill")):
+            self._replica.tick(self._kv, self._sched.decoding(),
+                               self.stats.decode_steps
+                               + self.stats.packed_ticks)
         return kind
 
     def _step_inner(self) -> str:
@@ -476,6 +522,15 @@ class ServingEngine:
         if (self._injector is not None and sch.has_work
                 and self._injector.fire("tick_delay")):
             return "stalled"           # the whole tick does nothing
+        if (self._replica is not None and sch.has_work
+                and self._injector.fire("shard_loss")):
+            spec = self._injector.plan.spec("shard_loss")
+            shard = (spec.shard if spec.shard is not None
+                     else self._injector.pick("shard_loss",
+                                              self.layout.n_seq))
+            self._lose_shard(shard % self.layout.n_seq)
+        if self._lost:
+            return self._degraded_tick()
 
         if self.prefill_mode == "padded":
             if sch.want_prefill():
@@ -570,7 +625,9 @@ class ServingEngine:
         fresh-admission gate — greedy/seeded sampling makes the rerun
         deterministic, and no other slot is touched."""
         kv, rid = self._kv, st.req.rid
-        plan = kv.plan_restore(rid, self._store)
+        plan = kv.plan_restore(rid, self._store,
+                               retries=self.config.restore_retries,
+                               backoff_s=self.config.restore_backoff_s)
         if plan is None:
             self.stats.restore_misses += 1
             if st.restarts >= self.config.max_restarts:
@@ -620,7 +677,10 @@ class ServingEngine:
             plan = self._plans.pop(rid)
             if rid in self._from_store:
                 self._from_store.discard(rid)
-                if self._kv.restore(rid, st.slot, self._store):
+                if self._kv.restore(
+                        rid, st.slot, self._store,
+                        retries=self.config.restore_retries,
+                        backoff_s=self.config.restore_backoff_s):
                     self.stats.restore_hits += 1
                 else:
                     # entry evicted between plan and bind: the bound
@@ -659,7 +719,7 @@ class ServingEngine:
                 return
             prio = (cand.req.priority if isinstance(cand, RequestState)
                     else cand.priority)
-            victim = sch.pick_victim(prio)
+            victim = sch.pick_victim(prio, now=self.now())
             if victim is None:
                 return
             self._spill(victim)
@@ -674,6 +734,7 @@ class ServingEngine:
                            tokens=st.nprefilled)
         self.stats.preemptions += 1
         self.stats.spilled_pages += n
+        self._drop_replica(st.slot)
         if requeue:
             self._sched.preempt(st)
         else:
@@ -739,6 +800,7 @@ class ServingEngine:
             self._kv.free(st.slot, None)   # never register the prompt
         else:
             self._kv.reset_row(st.slot)
+        self._drop_replica(st.slot)
         self._sched.remove(st)
         self._failed[st.req.rid] = reason
         self.stats.failed_requests += 1
@@ -769,6 +831,118 @@ class ServingEngine:
         else:
             self._kv.reset_row(st.slot)
         self._note_restart(st)
+        self._drop_replica(st.slot)
+
+    # -- degraded-mesh serving (shard loss) ----------------------------
+    def _drop_replica(self, slot: int) -> None:
+        if self._replica is not None:
+            self._replica.drop(slot)
+
+    def _lose_shard(self, shard: int) -> None:
+        """A ``shard_loss`` fault fired: one sequence shard's KV is now
+        unreadable.  Mark the degraded window open (the next
+        ``_degraded_left`` ticks serve through the standby replicas)
+        and empty the prefix cache — its shared pages hold content on
+        the dead shard, so every future hit would splice garbage."""
+        if shard in self._lost:
+            return
+        self._lost.add(shard)
+        self.stats.shard_lost += 1
+        self._degraded_left = self.config.degraded_grace
+        if self._kv.prefix is not None:
+            self._kv.prefix.clear()
+
+    def _degraded_tick(self) -> str:
+        """One serving tick with >= 1 sequence shard dead.  In-flight
+        decode requests keep emitting finite tokens through the
+        degraded program: the lost shard's exact columns are masked out
+        of the stat combine and its standby Segment-Means columns are
+        substituted through the log-g bias path (PRISM-bounded quality
+        loss instead of failure).  No admissions, no prefill, no
+        replica captures (a capture would gather the dead shard), and
+        crucially NO evictions — a request that looks finished is HELD
+        in its slot so its degraded tail tokens never reach
+        ``results()``; recovery re-prefills it and regenerates every
+        token exactly.  When the grace window closes (or nothing is
+        decoding) the tick recovers instead."""
+        sch = self._sched
+        decoding = [st for st in sch.decoding() if not st.finished()]
+        if self._degraded_left <= 0 or not decoding:
+            return self._recover_from_loss()
+        self.stats.degraded_ticks += 1
+        self._degraded_left -= 1
+        tok = np.zeros(self.n_slots, np.int32)
+        pos = np.full(self.n_slots, -1, np.int32)
+        for st in decoding:
+            tok[st.slot] = st.next_token
+            pos[st.slot] = st.pos
+        lost = jnp.asarray(self._replica.lost_mask(self._lost))
+        args = (jnp.asarray(tok), jnp.asarray(pos), *self._maps(), lost)
+        if self._hp.decode_mode == "exact":
+            args = args + (self._replica.assemble(),)
+        step = self._program("decode_degraded")
+        t0 = self.now()
+        logits, self._kv.storage = step(self.params, self._kv.storage,
+                                        *args)
+        rows = np.asarray(jax.device_get(logits))
+        now = self.now()
+        self.stats.step_latency.append(now - t0)
+        self.stats.occupancy.append(len(sch.active) / self.n_slots)
+        bad = ~np.isfinite(rows).all(axis=-1)
+        for st in decoding:
+            if bad[st.slot]:
+                continue    # don't quarantine: recovery resets it anyway
+            self._advance_degraded(st, rows[st.slot], now)
+        sch.note_decode()
+        self.stats.t_end = self.now()
+        return "degraded"
+
+    def _advance_degraded(self, st: RequestState, logits_row,
+                          now) -> None:
+        """Advance one decode slot on a degraded tick: sample and
+        stream the approximate token, but never finish/evict — the slot
+        is held until ``_recover_from_loss`` resets it, which is what
+        keeps the final ``results()`` oracle-identical."""
+        t = sample_token(logits_row, st.req.sampling, st.rng)
+        st.generated.append(t)
+        self.stats.generated_tokens += 1
+        if st.ttft is None:
+            st.ttft = now - st.req.arrival
+            self.stats.ttft.append(st.ttft)
+        st.pos += 1
+        st.next_token = t
+
+    def _recover_from_loss(self) -> str:
+        """Close the degraded window: rebuild EXACT KV for every active
+        request and return to exact serving.  Device-side content is
+        gone on the lost shard, so each slot goes through the
+        deterministic ``reset_for_refill`` re-prefill (scrub + replay
+        the prompt into the same bound pages; seeded sampling makes the
+        rerun token-identical to the uninterrupted oracle).  Spilled /
+        suspended entries live HOST-side in the offload store and
+        survive shard loss untouched — they restore through the normal
+        admission path after recovery.  Requests admitted after this
+        tick never see the degraded program."""
+        sch = self._sched
+        for _slot, st in sorted(sch.active.items()):
+            if st.restarts >= self.config.max_restarts:
+                self._fail_active(st, "max_restarts")
+                continue
+            try:
+                # fork COW-shared prefix pages private before the
+                # re-prefill rewrites position 0 onward
+                self._kv.ensure_writable(st.slot, 0,
+                                         len(st.req.prompt) - 1)
+            except RuntimeError:
+                self._fail_active(st, "degraded_out_of_pages")
+                continue
+            self._kv.scrub_slot(st.slot)
+            self._note_restart(st)
+        if self._replica is not None:
+            self._replica.drop_all()
+        self._lost.clear()
+        self._degraded_left = 0
+        return "recovered"
 
     # -- deadline expiry -----------------------------------------------
     def _miss(self, req, *, st: RequestState | None = None,
@@ -824,6 +998,7 @@ class ServingEngine:
                 self._kv.free(st.slot, None)
             else:
                 self._kv.reset_row(st.slot)
+            self._drop_replica(st.slot)
             sch.remove(st)
             self._miss(st.req, st=st, now=now)
         self._has_deadlines = any(
@@ -912,6 +1087,7 @@ class ServingEngine:
                 self._kv.free(st.slot, None)
             else:
                 self._kv.reset_row(st.slot)
+            self._drop_replica(st.slot)
             self._sched.remove(st)
             st.t_finish = self.now()
             self._failed[rid] = "cancelled"
@@ -935,6 +1111,10 @@ class ServingEngine:
                 "journal rides the page gather path")
         assert not self._plans and not self._from_store, (
             "snapshot mid-admission: call between engine steps")
+        if self._lost:
+            raise ValueError(
+                "snapshot during a degraded window (shard lost): the "
+                "page gather would read the dead shard — recover first")
         active = []
         for slot, st in sorted(self._sched.active.items()):
             active.append((slot, copy.deepcopy(st),
@@ -1042,6 +1222,7 @@ class ServingEngine:
                 # prompt pages survive under their cache entries)
                 self._kv.free(st.slot, st.req.prompt
                               if self._prefix_on else None)
+            self._drop_replica(st.slot)
             self._sched.evict(st, now)
             self._results[st.req.rid] = st
             self.stats.completed += 1

@@ -183,6 +183,10 @@ class EngineStats:
     quarantined: int = 0               # non-finite decode rows caught
     failed_requests: int = 0           # max_restarts / unrecoverable
     faults_injected: int = 0           # chaos faults actually fired
+    faults_by_kind: dict = field(default_factory=dict)  # kind -> fired
+    store_get_retries: int = 0         # KVStore reads re-tried (restore)
+    shard_lost: int = 0                # shard_loss faults entered degraded
+    degraded_ticks: int = 0            # ticks served in degraded mode
     cancelled: int = 0                 # requests cancelled by the caller
     ticks_idle: int = 0                # step() calls that found no work
     tokens_streamed: int = 0           # tokens delivered to TokenStreams
@@ -234,6 +238,11 @@ class EngineStats:
             "quarantined": self.quarantined,
             "failed_requests": self.failed_requests,
             "faults_injected": self.faults_injected,
+            "faults_by_kind": {k: v for k, v
+                               in sorted(self.faults_by_kind.items())},
+            "store_get_retries": self.store_get_retries,
+            "shard_lost": self.shard_lost,
+            "degraded_ticks": self.degraded_ticks,
             "cancelled": self.cancelled,
             "ticks_idle": self.ticks_idle,
             "tokens_streamed": self.tokens_streamed,
@@ -430,10 +439,13 @@ class FifoScheduler:
         self.free_slots.sort()
 
     # -- preemption --------------------------------------------------------
-    def pick_victim(self, below_priority: int):
+    def pick_victim(self, below_priority: int, now: float = 0.0):
         """Preempt policy: among active requests with priority strictly
         below ``below_priority``, pick the lowest-priority one with the
-        most work remaining (ties: highest rid, i.e. latest arrival).
+        most deadline slack (``deadline - now - remaining``; no deadline
+        counts as infinite slack — SLO-less work is always preempted
+        before anything racing a deadline), then the most work
+        remaining (ties: highest rid, i.e. latest arrival).
         Decode-phase requests are preferred victims — spilling one
         frees a full row at zero recompute; a mid-prefill victim is
         chosen only when nothing is decoding.  Returns None when no
@@ -445,8 +457,14 @@ class FifoScheduler:
             return None
         decode = [st for st in cands if not st.prefilling]
         pool = decode or cands
-        return max(pool, key=lambda st: (-st.req.priority, st.remaining,
-                                         st.req.rid))
+
+        def slack(st):
+            if st.req.deadline is None:
+                return float("inf")
+            return st.req.deadline - now - st.remaining
+
+        return max(pool, key=lambda st: (-st.req.priority, slack(st),
+                                         st.remaining, st.req.rid))
 
     def remove(self, st: RequestState) -> None:
         """Detach an active request from its slot WITHOUT finishing it

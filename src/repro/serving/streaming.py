@@ -44,9 +44,18 @@ request fall back to the synchronous path for that tick — tokens still
 stream, the pipeline just drains first (depth 1, full logits copy,
 host RNG sampling).  Fault injection (``EngineConfig.faults``) also
 forces the synchronous path: the chaos blast-radius contracts are
-defined per synchronous tick.  Control-plane operations that move or
-free cache state out of band — preemption, suspend, deadline expiry,
-snapshot, cancel — drain the in-flight pipeline first.
+defined per synchronous tick — which is also what makes degraded-mesh
+serving (``shard_loss``) safe to stream: the 'degraded' / 'recovered'
+tick kinds only ever occur on the synchronous path, so no speculative
+row is in flight when a shard dies or when recovery rewinds every
+active slot.  A stream crossing a degraded window delivers its first
+k tokens from the Segment-Means substitute path and the remainder
+exact: the recovery ``reset_for_refill`` rewinds ``generated`` below
+the delivered watermark, so re-decoded tokens only reach the stream
+past what was already sent (total per stream = ``max_new_tokens``,
+all finite).  Control-plane operations that move or free cache state
+out of band — preemption, suspend, deadline expiry, snapshot, cancel
+— drain the in-flight pipeline first.
 """
 from __future__ import annotations
 

@@ -84,6 +84,14 @@ def test_fault_spec_validation():
     assert FaultSpec(at=[1.0, 2]).at == (1, 2)   # coerced to int tuple
 
 
+def test_fault_spec_shard_validation():
+    with pytest.raises(ValueError, match="shard"):
+        FaultSpec(shard=-1)
+    assert FaultSpec(shard=2.0).shard == 2       # coerced to int
+    assert FaultSpec().shard is None
+    assert FaultSpec(at=(1,), shard=1).enabled
+
+
 def test_fault_plan_lookup_and_chaos():
     plan = FaultPlan()
     assert not plan.any_enabled
@@ -186,6 +194,40 @@ def test_store_get_loss_tears_peek_and_pop():
     assert s.put("c", 1, None)
     assert s.peek("c") is not None           # op 2: unscheduled, intact
     assert s.pop("c").n_pages == 1 and s.hits == 1
+
+
+def test_store_get_bounded_retry_then_drop():
+    """``KVStore.get`` retries a transient torn read (entry RETAINED
+    across non-final losses) and only drops the entry when the final
+    attempt loses too — the seam the restore path's bounded
+    retry-with-backoff rides before downgrading to re-prefill."""
+    inj = FaultInjector(FaultPlan(
+        seed=0, store_get_loss=FaultSpec(at=(0,))))
+    s = KVStore(injector=inj)
+    assert s.put("a", 3, None)
+    ent = s.get("a", retries=2)              # op 0 torn -> op 1 clean
+    assert ent is not None and ent.n_pages == 3
+    assert "a" in s and s.get_retries == 1
+    assert s.stats()["get_retries"] == 1
+    ent = s.get("a", retries=0, consume=True)   # op 2: clean pop
+    assert ent is not None and "a" not in s and s.hits == 1
+
+    # every attempt torn: the final loss keeps the old drop semantics
+    inj2 = FaultInjector(FaultPlan(
+        seed=0, store_get_loss=FaultSpec(at=(0, 1, 2))))
+    s2 = KVStore(injector=inj2)
+    assert s2.put("b", 2, None)
+    assert s2.get("b", retries=2) is None
+    assert "b" not in s2 and s2.bytes_used == 0
+    assert s2.get_retries == 2 and s2.misses == 1
+
+    # retries=0 is exactly the one-draw torn read
+    inj3 = FaultInjector(FaultPlan(
+        seed=0, store_get_loss=FaultSpec(at=(0,))))
+    s3 = KVStore(injector=inj3)
+    assert s3.put("c", 1, None)
+    assert s3.get("c") is None and "c" not in s3
+    assert s3.get_retries == 0
 
 
 # --------------------------------------------------------------------------
@@ -432,6 +474,155 @@ def test_max_restarts_exceeded_fails_cleanly():
     assert not kv.slot_pages and not kv.slot_state
     assert len(eng.kv_store) == 0 and eng.kv_store.bytes_used == 0
     assert sorted(eng._sched.free_slots) == list(range(4))
+
+
+def test_restore_retries_transient_store_loss():
+    """A transient ``store_get_loss`` during restore is retried away
+    (``EngineConfig.restore_retries``) instead of downgrading to
+    re-prefill — and with retries off, the SAME plan downgrades."""
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    mesh = _mesh()
+    oracle = _engine(params, mesh)
+    _submit_mix(oracle, n=2)
+    want = oracle.run()
+
+    def drive(**kw):
+        plan = FaultPlan(store_get_loss=FaultSpec(at=(0,)))
+        eng = _engine(params, mesh, offload=True, faults=plan, **kw)
+        _submit_mix(eng, n=2)
+        pre = False
+        for _ in range(600):
+            if not eng._sched.has_work and not eng._pending:
+                break
+            st = eng._find_active(0)
+            if (not pre and st is not None and not st.prefilling
+                    and len(st.generated) >= 1 and not st.finished()):
+                assert eng.preempt(0)
+                pre = True
+            eng.step()
+        assert pre and eng.results() == want and not eng.failed()
+        return eng
+
+    eng = drive()                            # default restore_retries=2
+    assert eng.stats.restore_hits == 1 and eng.stats.restore_misses == 0
+    assert eng.stats.restarts == 0
+    assert eng.stats.store_get_retries >= 1
+    assert eng.stats.summary()["store_get_retries"] >= 1
+
+    eng0 = drive(restore_retries=0)          # same plan, no retry budget
+    assert eng0.stats.restore_misses == 1 and eng0.stats.restarts == 1
+    assert eng0.stats.store_get_retries == 0
+
+
+# --------------------------------------------------------------------------
+# packed-path isfinite guard (satellite: forced non-finite decode row)
+# --------------------------------------------------------------------------
+
+def test_packed_nonfinite_row_quarantines_exactly_one_slot():
+    """Force a non-finite decode row out of a PACKED tick (mixed
+    prefill + decode) and assert the packed-path isfinite guard
+    quarantines exactly that one slot: the poisoned request re-prefills
+    and recovers, the mid-prefill neighbour is untouched, and both end
+    token-identical to the clean oracle."""
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    mesh = _mesh()
+    pA, pB = tuple(range(1, 7)), tuple(range(2, 8))
+    oracle = _engine(params, mesh)
+    oracle.submit(pA, max_new_tokens=6, sampling=SamplingParams(seed=0))
+    oracle.submit(pB, max_new_tokens=6, sampling=SamplingParams(seed=1))
+    want = oracle.run()
+
+    eng = _engine(params, mesh)
+    eng.submit(pA, max_new_tokens=6, sampling=SamplingParams(seed=0))
+    for _ in range(100):                     # drive A into steady decode
+        eng.step()
+        st = eng._find_active(0)
+        if (st is not None and not st.prefilling
+                and len(st.generated) >= 1 and not st.finished()):
+            break
+    else:
+        raise AssertionError("request 0 never reached decode")
+    # B admits this tick -> mixed packed tick; decode rows pack first,
+    # so row 0 is A's decode row
+    eng.submit(pB, max_new_tokens=6, sampling=SamplingParams(seed=1))
+    real = eng._packed
+
+    def nan_row0(*a, **k):
+        logits, storage = real(*a, **k)
+        return logits.at[0].set(float("nan")), storage
+
+    eng._packed = nan_row0
+    assert eng.step() == "packed"
+    eng._packed = real
+    assert eng.stats.quarantined == 1        # exactly one slot
+    assert eng.stats.restarts == 1
+    eng.run()
+    assert eng.results() == want and not eng.failed()
+    assert eng._results[0].restarts == 1
+    assert eng._results[1].restarts == 0
+
+
+# --------------------------------------------------------------------------
+# shard loss: degraded window + standby replicas (1x1 total loss; the
+# 2x4 exact+prism cells run in engine_equiv_runner.py)
+# --------------------------------------------------------------------------
+
+def test_shard_loss_degraded_window_recovers_token_identical():
+    """Kill the (only) sequence shard mid-decode: the engine serves a
+    bounded degraded window through the Segment-Means standby replicas
+    (finite tokens, no failures), then recovers via the deterministic
+    re-prefill and finishes token-identical to the clean oracle, with
+    the loss visible in the stats and the drained engine leak-free."""
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    mesh = _mesh()
+    oracle = _engine(params, mesh)
+    _submit_mix(oracle, n=3)
+    want = oracle.run()
+
+    plan = FaultPlan(shard_loss=FaultSpec(at=(6,), shard=0))
+    eng = _engine(params, mesh, faults=plan)
+    assert eng._replica is not None          # standby layer armed
+    _submit_mix(eng, n=3)
+    kinds = []
+    for _ in range(600):
+        if not eng._sched.has_work and not eng._pending:
+            break
+        kinds.append(eng.step())
+    assert "degraded" in kinds and "recovered" in kinds
+    assert eng.results() == want and not eng.failed()
+    s = eng.stats.summary()
+    assert s["shard_lost"] == 1 and s["degraded_ticks"] >= 1
+    assert s["faults_by_kind"]["shard_loss"] == 1
+    assert eng._replica.stats()["captures"] >= 1
+    kv = eng.kv_cache
+    kv.check()
+    assert not kv.slot_pages and not kv.slot_state
+    assert kv.table.free_pages == kv.paging.n_pages
+    assert sorted(eng._sched.free_slots) == list(range(4))
+
+
+def test_shard_loss_snapshot_refused_while_degraded():
+    """The snapshot gather reads every shard; while one is lost the
+    journal would be torn — snapshot() must refuse until recovery."""
+    params = T.init(TINY, jax.random.PRNGKey(0))
+    plan = FaultPlan(shard_loss=FaultSpec(at=(4,), shard=0),
+                     # hold the degraded window open long enough to
+                     # catch it mid-flight
+                     seed=0)
+    eng = _engine(params, _mesh(), faults=plan, degraded_grace=50)
+    _submit_mix(eng, n=2)
+    for _ in range(200):
+        if eng.step() == "degraded":
+            break
+    else:
+        raise AssertionError("never entered the degraded window")
+    with pytest.raises(ValueError, match="degraded"):
+        eng.snapshot()
+    for _ in range(600):                     # drain through recovery
+        if not eng._sched.has_work and not eng._pending:
+            break
+        eng.step()
+    assert eng.snapshot() is not None        # recovered: journal fine
 
 
 # --------------------------------------------------------------------------

@@ -43,10 +43,11 @@ def _mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def _req(rid, plen=6, max_new=4, priority=0, arrival=0.0):
+def _req(rid, plen=6, max_new=4, priority=0, arrival=0.0,
+         deadline=None):
     return Request(rid=rid, prompt=tuple(range(1, plen + 1)),
                    max_new_tokens=max_new, priority=priority,
-                   arrival=arrival)
+                   arrival=arrival, deadline=deadline)
 
 
 def _host_kv(n_pages=14, ppr=4, n_state=4, prefix=False):
@@ -241,6 +242,58 @@ def test_pick_victim_prefers_decoding_over_prefilling():
     sts = {st.req.rid: st for st in s.admit(now=0.0)}
     sts[1].begin_decode()             # rid1 decoding, rid0 mid-prefill
     assert s.pick_victim(5) is sts[1]
+
+
+def test_pick_victim_breaks_ties_by_deadline_slack():
+    """Deadline/SLO-aware victim policy: within a priority class, the
+    victim with the MOST slack (``deadline - now - remaining``) spills
+    first; the request racing its deadline is preempted last."""
+    s = FifoScheduler(3)
+    # same priority, same remaining work — slack alone decides
+    s.submit(_req(0, plen=4, max_new=8, deadline=100.0))  # loose SLO
+    s.submit(_req(1, plen=4, max_new=8, deadline=12.0))   # tight SLO
+    s.submit(_req(2, plen=4, max_new=8))                  # no deadline
+    sts = {st.req.rid: st for st in s.admit(now=0.0)}
+    for st in sts.values():
+        st.begin_decode()
+    # no deadline = infinite slack: always the first victim
+    assert s.pick_victim(5, now=0.0) is sts[2]
+    s.preempt(sts[2])
+    # loose SLO spills before tight SLO
+    assert s.pick_victim(5, now=0.0) is sts[0]
+    s.preempt(sts[0])
+    assert s.pick_victim(5, now=0.0) is sts[1]
+
+
+def test_pick_victim_slack_moves_with_the_clock():
+    """Slack is evaluated at ``now``: the same pair of requests swaps
+    victim order as one request's deadline closes in."""
+    s = FifoScheduler(2)
+    s.submit(_req(0, plen=4, max_new=4, deadline=20.0))
+    s.submit(_req(1, plen=4, max_new=8, deadline=21.0))
+    sts = {st.req.rid: st for st in s.admit(now=0.0)}
+    for st in sts.values():
+        st.begin_decode()
+    # t=0: slack0 = 20-0-4 = 16, slack1 = 21-0-8 = 13 -> rid0 spills
+    assert s.pick_victim(9, now=0.0) is sts[0]
+    # rid1 finishes most of its work: slack1 = 21-10-1 = 10,
+    # slack0 = 20-10-4 = 6 -> victim order flips at t=10
+    sts[1].generated = [5] * 7
+    assert s.pick_victim(9, now=10.0) is sts[1]
+
+
+def test_pick_victim_priority_still_dominates_slack():
+    """Slack is a TIE-BREAK inside a priority class, never a way for a
+    low-priority deadline to outrank a higher class."""
+    s = FifoScheduler(2)
+    s.submit(_req(0, plen=4, max_new=4, priority=0, deadline=9.0))
+    s.submit(_req(1, plen=4, max_new=4, priority=1))      # no deadline
+    sts = {st.req.rid: st for st in s.admit(now=0.0)}
+    for st in sts.values():
+        st.begin_decode()
+    # class 0 spills first even though its deadline is tight and the
+    # class-1 request has infinite slack
+    assert s.pick_victim(5, now=8.0) is sts[0]
 
 
 def test_scheduler_cancel_queued_and_parked():
